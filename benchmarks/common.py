@@ -1,0 +1,101 @@
+"""Shared benchmark scaffolding: calibrated strategy runs over the
+synthetic production trace (see DESIGN.md §7 for the workload anchors).
+
+Workload subsampling: traffic is thinned by ``scale`` and the fleet's
+instance-count knobs are scaled accordingly, preserving per-instance
+dynamics (see sim/perfmodel.py).  All $-figures use the paper's
+$98.32/h H100-cluster price.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.chiron import ChironPolicy
+from repro.core.controller import ControllerConfig, SageServeController
+from repro.core.queue_manager import QueueManager
+from repro.core.scaling import make_policy
+from repro.sim.metrics import Report
+from repro.sim.perfmodel import PROFILES, sustained_input_tps
+from repro.sim.simulator import SimConfig, Simulation
+from repro.sim.workload import PAPER_MODELS, REGIONS, WorkloadSpec, generate
+
+DOLLARS_PER_HOUR = 98.32     # paper §7.2.1
+THETA_HEADROOM = 0.7         # ILP capacity derating (keeps tail latency)
+
+
+@dataclasses.dataclass
+class BenchSpec:
+    days: float = 1.0
+    scale: float = 0.15
+    seed: int = 0
+    initial_instances: int = 5
+    spot_spare: int = 30
+    scheduler: str = "fcfs"
+    models: Sequence[str] = PAPER_MODELS
+    burst_mult: float = 0.0
+    burst_hours: Tuple[float, ...] = ()
+
+
+def make_trace(spec: BenchSpec):
+    return generate(WorkloadSpec(
+        days=spec.days, scale=spec.scale, seed=spec.seed,
+        models=spec.models, burst_mult=spec.burst_mult,
+        burst_hours=spec.burst_hours))
+
+
+def make_controller(models: Sequence[str]) -> SageServeController:
+    theta = {m: THETA_HEADROOM * sustained_input_tps(PROFILES[m])
+             for m in models}
+    return SageServeController(ControllerConfig(
+        models=list(models), regions=list(REGIONS), theta=theta,
+        min_instances=2, epsilon=0.8, fit_steps=150))
+
+
+def reset_trace(trace) -> None:
+    import math
+    for r in trace:
+        r.ttft = math.nan
+        r.e2e = math.nan
+        r.priority = 1
+        r.instance = None
+        r.served_region = None
+        r.admitted = math.nan
+
+
+def run_strategy(trace, spec: BenchSpec, strategy: str,
+                 scheduler: Optional[str] = None) -> Report:
+    reset_trace(trace)
+    models = list(spec.models)
+    scheduler = scheduler or spec.scheduler
+    if strategy == "siloed":
+        cfg = SimConfig(policy=make_policy("reactive"),
+                        queue_manager=None, siloed=True,
+                        siloed_iw=max(spec.initial_instances - 1, 2),
+                        siloed_niw=2,
+                        initial_instances=spec.initial_instances,
+                        spot_spare=spec.spot_spare, scheduler=scheduler)
+    elif strategy == "chiron":
+        prof = {m: sustained_input_tps(PROFILES[m]) for m in models}
+        pol = ChironPolicy(theta=0.6, profile_tps=prof,
+                           init_interactive=max(spec.initial_instances
+                                                - 2, 2),
+                           init_mixed=1, init_batch=1)
+        cfg = SimConfig(policy=pol, queue_manager=QueueManager(),
+                        initial_instances=pol.initial_instances(),
+                        spot_spare=spec.spot_spare, scheduler=scheduler)
+    else:
+        ctl = None if strategy == "reactive" else make_controller(models)
+        cfg = SimConfig(policy=make_policy(strategy), controller=ctl,
+                        queue_manager=QueueManager(),
+                        initial_instances=spec.initial_instances,
+                        spot_spare=spec.spot_spare, scheduler=scheduler)
+    sim = Simulation(trace, cfg, models=models, name=strategy)
+    return sim.run()
+
+
+def csv_line(name: str, value, derived="") -> str:
+    line = f"{name},{value},{derived}"
+    print(line, flush=True)
+    return line

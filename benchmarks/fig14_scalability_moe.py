@@ -1,0 +1,42 @@
+"""Fig. 14 (§7.2.5): adding Llama-4 Scout (MoE) as a fifth model."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import BenchSpec, csv_line, make_trace, run_strategy
+from repro.sim.workload import PAPER_MODELS
+
+
+def run(quick: bool = False):
+    models = tuple(PAPER_MODELS) + ("llama4-scout",)
+    spec = BenchSpec(days=0.4 if quick else 0.75,
+                     scale=0.06 if quick else 0.12, models=models)
+    trace = make_trace(spec)
+    out = []
+    for strat in ("reactive", "lt-ua"):
+        rep = run_strategy(trace, spec, strat)
+        scout = [r for r in trace if r.model == "llama4-scout"
+                 and not math.isnan(r.e2e)]
+        dense = [r for r in trace if r.model == "llama2-70b"
+                 and not math.isnan(r.e2e)]
+        if scout and dense:
+            out.append(csv_line(
+                f"fig14.e2e_p95.scout.{strat}",
+                round(float(np.percentile([r.e2e for r in scout], 95)), 2),
+                "s; paper: MoE latency better than dense peer"))
+            out.append(csv_line(
+                f"fig14.e2e_p95.llama2.{strat}",
+                round(float(np.percentile([r.e2e for r in dense], 95)), 2),
+                "s"))
+        ih_scout = sum(v for (m, r), v in rep.instance_hours.items()
+                       if m == "llama4-scout")
+        ih_dense = sum(v for (m, r), v in rep.instance_hours.items()
+                       if m == "llama2-70b")
+        out.append(csv_line(f"fig14.instance_hours.scout.{strat}",
+                            round(ih_scout, 1),
+                            "paper: fewer inst-h than dense (higher TPS)"))
+        out.append(csv_line(f"fig14.instance_hours.llama2.{strat}",
+                            round(ih_dense, 1), ""))
+    return out

@@ -1,0 +1,54 @@
+"""Fig. 8 + Table 1: Unified vs Siloed pools — instance-hours, memory
+utilization, TTFT/E2E per model."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BenchSpec, csv_line, make_trace, run_strategy
+
+
+def run(quick: bool = False):
+    spec = BenchSpec(days=0.5 if quick else 1.0,
+                     scale=0.08 if quick else 0.15)
+    trace = make_trace(spec)
+    out = []
+    reports = {}
+    tab1 = {}
+    import math
+    for strat in ("siloed", "reactive"):
+        reports[strat] = run_strategy(trace, spec, strat)
+        tab1[strat] = {}
+        for m in spec.models:
+            reqs = [r for r in trace if r.model == m and r.tier != "NIW"
+                    and not math.isnan(r.e2e)]
+            if reqs:
+                tab1[strat][m] = (
+                    float(np.percentile([r.ttft for r in reqs], 95)),
+                    float(np.percentile([r.e2e for r in reqs], 95)))
+    sil, uni = reports["siloed"], reports["reactive"]
+    for m in spec.models:
+        ih_s = sum(v for (mm, r), v in sil.instance_hours.items() if mm == m)
+        ih_u = sum(v for (mm, r), v in uni.instance_hours.items() if mm == m)
+        out.append(csv_line(f"fig8.instance_hours.siloed.{m}",
+                            round(ih_s, 1), "inst-h"))
+        out.append(csv_line(f"fig8.instance_hours.unified.{m}",
+                            round(ih_u, 1), "inst-h"))
+    tot_s, tot_u = sil.total_instance_hours(), uni.total_instance_hours()
+    sav = 100 * (1 - tot_u / tot_s)
+    out.append(csv_line("fig8.total_savings_pct", round(sav, 1),
+                        "paper: unified 34.5% fewer (West US day)"))
+    for strat, rep in reports.items():
+        us = [u for tr in rep.util_trace.values() for (_, u, _) in tr]
+        out.append(csv_line(f"fig8.mem_util_mean.{strat}",
+                            round(float(np.mean(us)), 3), "paper: unified higher"))
+        out.append(csv_line(f"fig8.spot_donated_h.{strat}",
+                            round(rep.total_spot_hours(), 1), "inst-h"))
+    # Table 1: P95 TTFT / E2E per model x strategy
+    for strat, vals in tab1.items():
+        for m, (tt, ee) in vals.items():
+            out.append(csv_line(f"tab1.ttft_p95.{strat}.{m}",
+                                round(tt, 2), "s"))
+            out.append(csv_line(f"tab1.e2e_p95.{strat}.{m}",
+                                round(ee, 2), "s"))
+    assert tot_u <= tot_s * 1.02, "unified must not use more than siloed"
+    return out

@@ -1,0 +1,61 @@
+"""Render the §Roofline markdown table from dryrun JSON reports.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        dryrun_single_pod.json [dryrun_multi_pod.json] > roofline.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.2f}ms"
+    return f"{t*1e6:.0f}us"
+
+
+def render(results) -> str:
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | "
+        "bottleneck | MODEL_FLOPS/HLO | bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | FAILED: "
+                         f"{r['error'][:60]} | | | | | |")
+            continue
+        mem = r.get("memory_analysis", {})
+        dev_bytes = sum(v for v in (mem.get("argument_size_in_bytes"),
+                                    mem.get("temp_size_in_bytes"),
+                                    mem.get("output_size_in_bytes"))
+                        if v) / 1e9
+        uf = r.get("useful_flops_frac")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_t(r['compute_t'])} | {fmt_t(r['memory_t'])} | "
+            f"{fmt_t(r['collective_t'])} | **{r['bottleneck']}** | "
+            f"{uf:.3f} | {dev_bytes:.1f} GB |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_t(r['compute_t'])} | {fmt_t(r['memory_t'])} | "
+            f"{fmt_t(r['collective_t'])} | **{r['bottleneck']}** | - | "
+            f"{dev_bytes:.1f} GB |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    argv = argv or sys.argv[1:]
+    for path in argv:
+        with open(path) as f:
+            results = json.load(f)
+        ok = sum(1 for r in results if "error" not in r)
+        print(f"\n## {path} — {ok}/{len(results)} compiled\n")
+        print(render(results))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  ``--quick`` shrinks traces for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig8_unified_vs_siloed, fig11_instance_hours,
+                            fig14_scalability_moe, fig15_schedulers,
+                            fig16_bursts_week, fig_ablation, kernel_bench,
+                            tab3_workload_characterization, tab_ilp_solver)
+    benches = {
+        "tab3_workload_characterization": tab3_workload_characterization,
+        "tab_ilp_solver": tab_ilp_solver,
+        "kernel_bench": kernel_bench,
+        "fig8_unified_vs_siloed": fig8_unified_vs_siloed,
+        "fig11_instance_hours": fig11_instance_hours,
+        "fig14_scalability_moe": fig14_scalability_moe,
+        "fig15_schedulers": fig15_schedulers,
+        "fig16_bursts_week": fig16_bursts_week,
+        "fig_ablation": fig_ablation,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,value,derived", flush=True)
+    failures = []
+    for name, mod in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run(quick=args.quick)
+        except Exception as e:
+            failures.append((name, e))
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        for n, e in failures:
+            print(f"FAILED {n}: {e}", file=sys.stderr)
+        return 1
+    print("# all benchmarks complete", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

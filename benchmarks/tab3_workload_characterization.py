@@ -1,0 +1,64 @@
+"""§3 workload characterization: verify the synthetic trace reproduces
+every statistic the paper publishes about the O365 traces."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.sim.workload import WorkloadSpec, generate
+
+
+def run(quick: bool = False):
+    # global Jul-2025 trace statistics (§3): IW = 72 % of requests, 3:1
+    # IW:NIW — vs. the Nov-2024 West-US peak-day anchor (1.4M/0.2M = 7:1)
+    # used by the capacity benchmarks; the generator supports both mixes.
+    spec = WorkloadSpec(days=4.0 if quick else 7.0,
+                        scale=0.01 if quick else 0.02, seed=0,
+                        niw_per_region_day=0.54e6)
+    reqs = generate(spec)
+    out = []
+    tiers = {t: sum(1 for r in reqs if r.tier == t)
+             for t in ("IW-F", "IW-N", "NIW")}
+    iw = tiers["IW-F"] + tiers["IW-N"]
+    out.append(csv_line("tab3.iw_frac_pct", round(100 * iw / len(reqs), 1),
+                        "paper: IW = 72% of requests"))
+    out.append(csv_line("tab3.iw_to_niw_ratio",
+                        round(iw / tiers["NIW"], 2), "paper: ~3:1"))
+    out.append(csv_line("tab3.iwf_largest_tier",
+                        int(tiers["IW-F"] > tiers["IW-N"] > 0),
+                        "paper: IW-F largest"))
+    # diurnal peak/trough + weekend quiesce (IW-F)
+    arr = np.array([r.arrival for r in reqs if r.tier == "IW-F"])
+    day = arr % 86400
+    hist, _ = np.histogram(day, bins=24, range=(0, 86400))
+    out.append(csv_line("tab3.diurnal_peak_to_trough",
+                        round(float(hist.max() / max(hist.min(), 1)), 1),
+                        "paper: strong diurnal periodicity"))
+    dow = (arr // 86400 + spec.start_dow) % 7
+    if (dow >= 5).sum() > 100:
+        wk = ((dow < 5).mean() / max((dow >= 5).mean(), 1e-9)
+              * (2 / 5))
+        out.append(csv_line("tab3.weekday_to_weekend_rate",
+                            round(float(wk), 2),
+                            "per-day rate ratio; paper: weekends quiesce"))
+    # NIW flat: coefficient of variation of hourly NIW rate
+    arrn = np.array([r.arrival for r in reqs if r.tier == "NIW"])
+    h, _ = np.histogram(arrn % 86400, bins=24, range=(0, 86400))
+    out.append(csv_line("tab3.niw_hourly_cv",
+                        round(float(h.std() / h.mean()), 3),
+                        "paper: NIW flat through the week"))
+    # token CDF (Fig 10)
+    prompts = np.array([r.prompt_tokens for r in reqs])
+    outs = np.array([r.output_tokens for r in reqs])
+    out.append(csv_line("tab3.prompt_tokens_median", int(np.median(prompts)),
+                        "paper Fig10: majority > 1k"))
+    out.append(csv_line("tab3.output_tokens_median", int(np.median(outs)),
+                        "paper Fig10: most < 1k"))
+    out.append(csv_line("tab3.prompt_gt_1k_pct",
+                        round(100 * float((prompts > 1000).mean()), 1), "%"))
+    # regional model skew (East amplitude > West)
+    east = sum(1 for r in reqs if r.region == "eastus")
+    west = sum(1 for r in reqs if r.region == "westus")
+    out.append(csv_line("tab3.east_to_west_volume", round(east / west, 2),
+                        "paper: East highest, West lowest"))
+    return out

@@ -1,0 +1,34 @@
+"""§5 solver-runtime scaling: paper reports 1.41s at (l=4,r=3,g=1) and
+33s at (l=20,r=20,g=5)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.provisioner import ProvisionProblem, solve
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    sizes = [(4, 3, 1), (8, 6, 2)] if quick else \
+        [(4, 3, 1), (8, 6, 2), (20, 20, 5)]
+    out = []
+    for (l, r, g) in sizes:
+        n = rng.integers(2, 20, (l, r, g)).astype(float)
+        prob = ProvisionProblem(
+            n=n, theta=rng.uniform(800, 5000, (l, g)),
+            alpha=rng.uniform(50, 120, (g,)),
+            sigma=rng.uniform(5, 30, (l, g)),
+            rho_peak=rng.uniform(5e3, 6e4, (l, r)),
+            epsilon=0.8, region_cap=np.full(r, 500.0 * l * g),
+            min_instances=2)
+        t0 = time.time()
+        sol = solve(prob)
+        dt = time.time() - t0
+        out.append(csv_line(f"ilp.solve_s.l{l}r{r}g{g}", round(dt, 2),
+                            f"{sol.status}; paper: 1.41s @(4,3,1), "
+                            f"33s @(20,20,5)"))
+        assert sol.status in ("optimal", "feasible")
+    return out

@@ -1,0 +1,42 @@
+"""Full strategy shoot-out on a peak day: Siloed / Reactive / LT-I / LT-U /
+LT-UA / Chiron — reproduces the shape of Fig. 8 + Fig. 11 of the paper.
+
+    PYTHONPATH=src python examples/autoscale_simulation.py [--scale 0.15]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import BenchSpec, make_trace, run_strategy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--days", type=float, default=1.0)
+    args = ap.parse_args()
+
+    spec = BenchSpec(days=args.days, scale=args.scale)
+    trace = make_trace(spec)
+    print(f"{len(trace)} requests, {args.days} day(s), scale {args.scale}\n")
+    reports = {}
+    import math
+    for strat in ("siloed", "reactive", "lt-i", "lt-u", "lt-ua", "chiron"):
+        for r in trace:
+            r.ttft = math.nan
+            r.e2e = math.nan
+            r.priority = 1
+        reports[strat] = run_strategy(trace, spec, strat)
+        print(reports[strat].summary())
+        print()
+    base = reports["reactive"].total_instance_hours()
+    print("=== instance-hours vs Unified Reactive ===")
+    for strat, rep in reports.items():
+        d = 100 * (1 - rep.total_instance_hours() / base)
+        print(f"  {strat:9s} {rep.total_instance_hours():8.1f} h "
+              f"({d:+.1f}% vs reactive)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end serving driver: a REAL JAX model instance behind the
+SageServe scheduling stack.
+
+A reduced StarCoder2 instance (actual forward passes, continuous
+batching, DPA scheduling) serves a batched mixed IW-F/IW-N/NIW request
+stream; NIW requests flow through the Queue Manager and are drip-fed on
+capacity signals — the single-instance slice of the full SageServe stack
+running on live compute rather than the simulator's perf model.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch, reduce_for_smoke
+from repro.core.queue_manager import QueueManager
+from repro.dist.sharding import unbox
+from repro.models import model
+from repro.serving.engine import ServeRequest, ServingEngine
+
+
+def main():
+    cfg = reduce_for_smoke(get_arch("starcoder2-7b"))
+    params = unbox(model.init(cfg, jax.random.PRNGKey(0)))
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128,
+                        scheduler="dpa")
+    qm = QueueManager(one_thresh=0.99, two_thresh=0.6)
+    rng = np.random.default_rng(0)
+
+    # 9 interactive + 6 NIW requests
+    iw, niw = [], []
+    for i in range(9):
+        tier = "IW-F" if i % 3 == 0 else "IW-N"
+        r = ServeRequest(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, int(rng.integers(8, 24))).astype(np.int32),
+            max_new_tokens=12, tier=tier, arrival=float(i),
+            ttft_deadline=i + (3.0 if tier == "IW-F" else 30.0))
+        iw.append(r)
+    for i in range(9, 15):
+        r = ServeRequest(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 16).astype(np.int32),
+            max_new_tokens=12, tier="NIW", arrival=float(i),
+            ttft_deadline=i + 24 * 3600.0)
+        r.model = "starcoder2-7b"
+        r.prompt_tokens = len(r.prompt)
+        r.output_tokens = r.max_new_tokens
+        niw.append(r)
+        qm.submit(r)
+
+    for r in iw:
+        eng.submit(r)
+    # engine loop with queue-manager capacity signals
+    while eng.has_work or qm.depth() > 0:
+        util = eng.active / eng.max_batch
+        for released in qm.on_capacity_signal("starcoder2-7b", "local",
+                                              util, float(eng.step_count)):
+            eng.submit(released)
+        eng.step()
+        if eng.step_count > 2000:
+            raise RuntimeError("engine did not drain")
+
+    done = iw + niw
+    assert all(r.done_step is not None for r in done)
+    print(f"served {len(done)} requests ({len(iw)} IW / {len(niw)} NIW) "
+          f"in {eng.step_count} engine steps")
+    for r in done:
+        print(f"  req {r.rid:2d} [{r.tier:4s}] ttft_step={r.ttft_step:4d} "
+              f"done={r.done_step:4d} tokens={len(r.tokens)}")
+    iwf_ttft = max(r.ttft_step - int(r.arrival) for r in iw
+                   if r.tier == "IW-F")
+    print(f"IW-F worst queueing (steps): {iwf_ttft} — DPA kept fast-tier "
+          f"ahead while NIW back-filled spare slots")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Routing logic (§6.1): global region routing, endpoint JSQ, instance pick.
+
+Global IW routing: pick the first preferred region whose effective memory
+utilization is below ``threshold``; if none qualifies, the least-utilized
+region.  Endpoint routing: least-loaded deployment by effective memory;
+instance routing: Join-the-Shortest-Queue on remaining tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+
+def route_global(region_utils: Dict[str, float],
+                 preference: Sequence[str],
+                 threshold: float = 0.7) -> str:
+    """region_utils: effective mem util per candidate region."""
+    for r in preference:
+        if r in region_utils and region_utils[r] < threshold:
+            return r
+    return min(region_utils, key=region_utils.get)
+
+
+def route_jsq(instance_loads: Dict[str, float]) -> str:
+    """instance id -> remaining tokens to process; pick the minimum."""
+    return min(instance_loads, key=lambda k: (instance_loads[k], k))
+
+
+def pick_endpoint(endpoint_utils: Dict[str, float]) -> str:
+    """Least effective-memory-utilized deployment endpoint in a region."""
+    return min(endpoint_utils, key=lambda k: (endpoint_utils[k], k))

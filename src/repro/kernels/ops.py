@@ -1,0 +1,37 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode;
+on TPU they compile to Mosaic.  ``ref.py`` holds the pure-jnp oracles the
+test suite sweeps against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, q_pos, k_pos, *, scale, causal=True, window=0,
+                    block_q=128, block_k=128):
+    return _fa.flash_attention(q, k, v, q_pos, k_pos, scale=scale,
+                               causal=causal, window=window,
+                               block_q=block_q, block_k=block_k)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "block_k"))
+def decode_attention(q, k, v, k_pos, cur_pos, *, scale, window=0,
+                     block_k=512):
+    return _dec.decode_attention(q, k, v, k_pos, cur_pos, scale=scale,
+                                 window=window, block_k=block_k)
+
+
+@jax.jit
+def ssd_state_scan(states, decay, s0):
+    return _ssd.ssd_state_scan(states, decay, s0)

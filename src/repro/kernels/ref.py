@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, scale: float,
+                        causal: bool = True, window: int = 0):
+    """q: (B,H,S,hd); k/v: (B,Hkv,T,hd); q_pos: (B,S); k_pos: (B,T)."""
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32)) * scale
+    mask = (k_pos[:, None, :] >= 0) & (q_pos[:, :, None] >= 0)
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, k_pos, cur_pos, *, scale: float,
+                         window: int = 0):
+    """q: (B,H,hd); k/v: (B,Hkv,T,hd); k_pos: (B,T); cur_pos: (B,)."""
+    B, H, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) * scale
+    mask = (k_pos >= 0) & (k_pos <= cur_pos[:, None])
+    if window:
+        mask &= (cur_pos[:, None] - k_pos) < window
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_state_scan_ref(states, decay, s0):
+    """Cross-chunk SSD recurrence.
+
+    states: (b, c, h, p, n) fp32; decay: (b, c, h); s0: (b, h, p, n).
+    Returns (prev_states (b,c,h,p,n) — the state *entering* each chunk,
+    final (b,h,p,n)).
+    """
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), decay.swapaxes(0, 1)))
+    return prev.swapaxes(0, 1), final

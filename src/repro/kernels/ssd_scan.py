@@ -1,0 +1,71 @@
+"""Mamba2 SSD cross-chunk state recurrence — Pallas TPU kernel.
+
+The chunked SSD algorithm reduces the sequence dimension to ``c`` chunk
+states of shape (head_dim, state); the remaining serial work is the
+first-order recurrence  S_c = decay_c * S_{c-1} + states_c.  This kernel
+runs that recurrence with the full (c, p, n) tile resident in VMEM —
+one grid step per (batch, head), fori_loop over chunks — so the scan
+never round-trips chunk states through HBM the way a lax.scan of small
+matmuls does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_scan_kernel(states_ref, decay_ref, s0_ref, prev_ref, final_ref, *,
+                     nchunks):
+    s0 = s0_ref[0, 0]                                   # (p, n)
+
+    def body(i, carry):
+        prev_ref[0, i] = carry
+        dec = decay_ref[0, i, 0]
+        return carry * dec + states_ref[0, i]
+
+    final = jax.lax.fori_loop(0, nchunks, body, s0)
+    final_ref[0, 0] = final
+
+
+def ssd_state_scan(states, decay, s0, *, interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """states: (b,c,h,p,n) fp32; decay: (b,c,h); s0: (b,h,p,n).
+
+    Returns (prev_states (b,c,h,p,n), final (b,h,p,n)) — prev_states[c]
+    is the state *entering* chunk c (matches ``ref.ssd_state_scan_ref``).
+    """
+    b, c, h, p, n = states.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    # layout: move h next to b so one grid step owns a (c, p, n) tile
+    st = states.transpose(0, 2, 1, 3, 4).reshape(b * h, c, p, n)
+    dc = decay.transpose(0, 2, 1).reshape(b * h, c, 1)
+    s0r = s0.reshape(b * h, 1, p, n)
+
+    kernel = functools.partial(_ssd_scan_kernel, nchunks=c)
+    prev, final = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, c, p, n), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, c, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, p, n), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, c, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, 1, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(st, dc, s0r)
+    prev = prev.reshape(b, h, c, p, n).transpose(0, 2, 1, 3, 4)
+    final = final.reshape(b, h, p, n)
+    return prev, final

@@ -1,0 +1,53 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the reduced (smoke) variant of the chosen
+architecture on synthetic data; on a real slice, pass ``--full`` and a
+production mesh is constructed and the same code path shards via the
+logical-axis rules.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs import get_arch, reduce_for_smoke
+from repro.data.pipeline import DataConfig
+from repro.dist.sharding import TRAIN_RULES, axis_rules
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.train.loop import train
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config on the production mesh")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = reduce_for_smoke(cfg)
+    mesh = make_production_mesh() if args.full else make_local_mesh()
+    opt = AdamW(lr=cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
+                                   total=args.steps))
+    data = DataConfig(batch_size=args.batch, seq_len=args.seq)
+    with axis_rules(mesh, TRAIN_RULES):
+        out = train(cfg, steps=args.steps, data=data, opt=opt,
+                    ckpt_path=args.ckpt, remat=args.remat)
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,378 @@
+"""Attention: GQA/MQA, MLA (DeepSeek), sliding-window ring KV cache.
+
+Cache layout (uniform for full + windowed attention)::
+
+    {"k": (B, W, Hkv, hd), "v": (B, W, Hkv, hd), "pos": (B, W) int32}
+
+``pos[b, s]`` is the absolute position held in slot ``s`` (-1 = empty).
+For full attention W == max_seq and slot index == position; for a sliding
+window of size w, W == w and slot index == position % w (ring buffer).
+Keys are stored *after* RoPE, so the mask is the only position-dependent
+piece at read time.
+
+MLA caches the compressed latent instead::
+
+    {"ckv": (B, W, kv_lora), "krope": (B, W, rope_dim), "pos": (B, W)}
+
+Prefill uses a q-block lazy-flash (lax.scan over query blocks) so the
+(S, T) score matrix is never fully materialized; decode uses the absorbed
+MLA form / direct GQA reduction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import P, shard
+from repro.models import flags
+from repro.models.layers import apply_norm, apply_rope, dense_init, init_norm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.head_dim
+    if cfg.use_mla:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p = {
+            "wq_a": dense_init(ks[0], (d, m.q_lora_rank), ("embed", "lora"), dtype=dt),
+            "wq_b": dense_init(ks[1], (m.q_lora_rank, cfg.num_heads * qk_head),
+                               ("lora", "qkv"), dtype=dt),
+            "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                                ("embed", "lora"), dtype=dt),
+            "wk_b": dense_init(ks[3], (m.kv_lora_rank,
+                                       cfg.num_heads * m.qk_nope_head_dim),
+                               ("lora", "qkv"), dtype=dt),
+            "wv_b": dense_init(ks[4], (m.kv_lora_rank,
+                                       cfg.num_heads * m.v_head_dim),
+                               ("lora", "qkv"), dtype=dt),
+            "wo": dense_init(ks[5], (cfg.num_heads * m.v_head_dim, d),
+                             ("qkv", "embed"), dtype=dt),
+            "q_norm": {"scale": P(jnp.ones((m.q_lora_rank,), jnp.float32),
+                                  (None,))},
+            "kv_norm": {"scale": P(jnp.ones((m.kv_lora_rank,), jnp.float32),
+                                   (None,))},
+        }
+        return p
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads * hd), ("embed", "qkv"), dtype=dt),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads * hd), ("embed", "qkv"), dtype=dt),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads * hd), ("embed", "qkv"), dtype=dt),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, d), ("qkv", "embed"), dtype=dt),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = P(jnp.zeros((cfg.num_heads * hd,), dt), ("qkv",))
+        p["bk"] = P(jnp.zeros((cfg.num_kv_heads * hd,), dt), ("qkv",))
+        p["bv"] = P(jnp.zeros((cfg.num_kv_heads * hd,), dt), ("qkv",))
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               window: Optional[int] = None) -> Dict:
+    """Single-layer cache (the model stacks these along a layer axis)."""
+    w = window or (cfg.sliding_window or max_seq)
+    w = min(w, max_seq)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.use_mla:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, w, m.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, w, m.qk_rope_head_dim), dt),
+            "pos": jnp.full((batch, w), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, w, cfg.num_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((batch, w), -1, jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig, long_context: bool = False) -> Dict:
+    """Logical axes for the cache (kv_seq shardable for long-context)."""
+    seq = "kv_seq"
+    if cfg.use_mla:
+        return {"ckv": ("batch", seq, "lora"),
+                "krope": ("batch", seq, None),
+                "pos": ("batch", seq)}
+    return {"k": ("batch", seq, "kv_heads", "head_dim"),
+            "v": ("batch", seq, "kv_heads", "head_dim"),
+            "pos": ("batch", seq)}
+
+
+# --------------------------------------------------------------------------
+# Core attention math
+# --------------------------------------------------------------------------
+
+def _attend(q, k, v, mask, scale):
+    """q:(B,S,H,hd) k/v:(B,T,Hkv,hd) mask:(B,S,T) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, S, Hkv, g, hd)
+    if flags.ATTN_BF16_STREAM:
+        # bf16 operands, fp32 accumulation: halves K/V HBM traffic and
+        # skips the fp32 materialization (see EXPERIMENTS.md §Perf)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", w, v,
+                         preferred_element_type=jnp.float32)
+    else:
+        qg = qg.astype(jnp.float32)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                            k.astype(jnp.float32)) * scale
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, q_positions, k_positions, *,
+                        window: int = 0, scale: float, block_q: int = 1024):
+    """Causal (optionally windowed) attention scanning over query blocks.
+
+    Never materializes the full (S, T) score tensor: peak score memory is
+    (B, H, block_q, T).  q_positions/k_positions are absolute positions;
+    k slots with position < 0 are masked out.
+    """
+    B, S, H, hd = q.shape
+    if flags.PROBE_BLOCK_Q:
+        block_q = flags.PROBE_BLOCK_Q
+    bq = min(block_q, S)
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                              constant_values=-1)
+    nblk = q.shape[1] // bq
+    qb = q.reshape(B, nblk, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    pb = q_positions.reshape(B, nblk, bq).transpose(1, 0, 2)
+
+    def step(_, inp):
+        qi, pi = inp                          # (B,bq,H,hd), (B,bq)
+        mask = (k_positions[:, None, :] <= pi[:, :, None])
+        mask &= (k_positions[:, None, :] >= 0) & (pi[:, :, None] >= 0)
+        if window:
+            mask &= (pi[:, :, None] - k_positions[:, None, :]) < window
+        return None, _attend(qi, k, v, mask, scale)
+
+    _, out = jax.lax.scan(step, None, (qb, pb),
+                          unroll=flags.scan_unroll())
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nblk * bq, H, v.shape[-1])
+    return out[:, :S]
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def attention_forward(params, x, cfg: ModelConfig, positions,
+                      *, causal: bool = True, return_cache: bool = False,
+                      window: Optional[int] = None,
+                      kv_x: Optional[jnp.ndarray] = None):
+    """x: (B, S, D).  kv_x != None => cross-attention (no causal mask)."""
+    if cfg.use_mla:
+        return _mla_forward(params, x, cfg, positions,
+                            return_cache=return_cache)
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    src = x if kv_x is None else kv_x
+    T = src.shape[1]
+    q = x @ params["wq"]
+    k = src @ params["wk"]
+    v = src @ params["wv"]
+    if cfg.use_qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+
+    if cfg.pos_emb == "rope" and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(hd)
+    if causal and kv_x is None:
+        kpos = positions
+        out = blockwise_attention(q, k, v, positions, kpos,
+                                  window=window or cfg.sliding_window,
+                                  scale=scale)
+    else:  # bidirectional (encoder) or cross attention
+        kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        mask = jnp.ones((B, S, T), bool)
+        out = _attend(q, k, v, mask, scale)
+
+    y = out.reshape(B, S, cfg.num_heads * hd) @ params["wo"]
+    y = shard(y, "batch", "seq", "embed_act")
+    if not return_cache:
+        return y, None
+    return y, {"k": k, "v": v, "pos": positions.astype(jnp.int32)}
+
+
+def _mla_forward(params, x, cfg: ModelConfig, positions, *,
+                 return_cache: bool):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q_lat = apply_norm(params["q_norm"], x @ params["wq_a"], cfg)
+    q = (q_lat @ params["wq_b"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    ckv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    ckv = apply_norm(params["kv_norm"], ckv, cfg)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+
+    k_nope = (ckv @ params["wk_b"]).reshape(B, S, H, nope)
+    v = (ckv @ params["wv_b"]).reshape(B, S, H, vd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    out = blockwise_attention(q_full, k, v, positions, positions,
+                              window=0, scale=scale)
+    y = out.reshape(B, S, H * vd) @ params["wo"]
+    y = shard(y, "batch", "seq", "embed_act")
+    if not return_cache:
+        return y, None
+    return y, {"ckv": ckv, "krope": k_rope, "pos": positions.astype(jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# Single-token decode
+# --------------------------------------------------------------------------
+
+def attention_decode(params, x, cfg: ModelConfig, cache: Dict,
+                     cur_pos: jnp.ndarray,
+                     window: Optional[int] = None):
+    """x: (B, 1, D); cur_pos: (B,) absolute position of the new token.
+
+    Returns (y, new_cache).
+    """
+    if cfg.use_mla:
+        return _mla_decode(params, x, cfg, cache, cur_pos)
+    B = x.shape[0]
+    hd = cfg.head_dim
+    W = cache["k"].shape[1]
+    q = (x @ params["wq"])
+    k = (x @ params["wk"])
+    v = (x @ params["wv"])
+    if cfg.use_qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, 1, cfg.num_heads, hd)
+    k = k.reshape(B, 1, cfg.num_kv_heads, hd)
+    v = v.reshape(B, 1, cfg.num_kv_heads, hd)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, cur_pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, cur_pos[:, None], cfg.rope_theta)
+
+    slot = jnp.mod(cur_pos, W)  # ring index (== pos when W == max_seq)
+    if flags.WHERE_CACHE_UPDATE:
+        sel = (jnp.arange(W, dtype=jnp.int32)[None, :]
+               == slot[:, None])                         # (B, W)
+        new_cache = {
+            "k": jnp.where(sel[:, :, None, None],
+                           k[:, 0][:, None], cache["k"]),
+            "v": jnp.where(sel[:, :, None, None],
+                           v[:, 0][:, None], cache["v"]),
+            "pos": jnp.where(sel, cur_pos[:, None].astype(jnp.int32),
+                             cache["pos"]),
+        }
+    else:
+        bidx = jnp.arange(B)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(k[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(v[:, 0]),
+            "pos": cache["pos"].at[bidx, slot].set(cur_pos.astype(jnp.int32)),
+        }
+    kpos = new_cache["pos"]
+    mask = (kpos <= cur_pos[:, None]) & (kpos >= 0)
+    win = window or cfg.sliding_window
+    if win:
+        mask &= (cur_pos[:, None] - kpos) < win
+    out = _attend(q, new_cache["k"], new_cache["v"], mask[:, None, :],
+                  1.0 / math.sqrt(hd))
+    y = out.reshape(B, 1, cfg.num_heads * hd) @ params["wo"]
+    return shard(y, "batch", None, "embed_act"), new_cache
+
+
+def cross_attention_decode(params, x, cfg: ModelConfig, cross_cache: Dict):
+    """Decoder cross-attn against a fixed, precomputed encoder KV cache."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ params["wq"])
+    if cfg.use_qkv_bias:
+        q = q + params["bq"]
+    q = q.reshape(B, 1, cfg.num_heads, hd)
+    mask = jnp.ones((B, 1, cross_cache["k"].shape[1]), bool)
+    out = _attend(q, cross_cache["k"], cross_cache["v"], mask,
+                  1.0 / math.sqrt(hd))
+    y = out.reshape(B, 1, cfg.num_heads * hd) @ params["wo"]
+    return shard(y, "batch", None, "embed_act")
+
+
+def _mla_decode(params, x, cfg: ModelConfig, cache: Dict, cur_pos):
+    """Absorbed-matrix MLA decode: attention runs in the latent space."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    lora = m.kv_lora_rank
+    W = cache["ckv"].shape[1]
+
+    q_lat = apply_norm(params["q_norm"], x @ params["wq_a"], cfg)
+    q = (q_lat @ params["wq_b"]).reshape(B, 1, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, cur_pos[:, None], cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    ckv_new = apply_norm(params["kv_norm"], kv[..., :lora], cfg)
+    krope_new = apply_rope(kv[..., None, lora:], cur_pos[:, None],
+                           cfg.rope_theta)[:, :, 0, :]
+
+    slot = jnp.mod(cur_pos, W)
+    bidx = jnp.arange(B)
+    new_cache = {
+        "ckv": cache["ckv"].at[bidx, slot].set(ckv_new[:, 0]),
+        "krope": cache["krope"].at[bidx, slot].set(krope_new[:, 0]),
+        "pos": cache["pos"].at[bidx, slot].set(cur_pos.astype(jnp.int32)),
+    }
+    # absorb W_uk into q: (B,1,H,nope) x (lora, H, nope) -> (B,1,H,lora)
+    wk_b = params["wk_b"].reshape(lora, H, nope)
+    q_abs = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scores = jnp.einsum("bshl,btl->bhst", q_abs,
+                        new_cache["ckv"].astype(jnp.float32))
+    scores += jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                         new_cache["krope"].astype(jnp.float32))
+    scores *= 1.0 / math.sqrt(nope + rope_d)
+    mask = (new_cache["pos"] <= cur_pos[:, None]) & (new_cache["pos"] >= 0)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btl->bshl", w,
+                     new_cache["ckv"].astype(jnp.float32))
+    wv_b = params["wv_b"].reshape(lora, H, vd)
+    out = jnp.einsum("bshl,lhv->bshv", ctx, wv_b.astype(jnp.float32))
+    y = out.reshape(B, 1, H * vd).astype(x.dtype) @ params["wo"]
+    return shard(y, "batch", None, "embed_act"), new_cache

@@ -1,0 +1,47 @@
+"""Global tracing flags.
+
+SCAN_UNROLL: when True, every lax.scan in the model (layer stacks,
+blockwise-attention q-blocks, SSD chunk scan) fully unrolls.  Used by the
+dry-run's cost probes: XLA's HloCostAnalysis counts a while-loop body
+once regardless of trip count, so roofline FLOPs/bytes are measured on
+small unrolled variants and extrapolated linearly in depth
+(see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import contextlib
+
+SCAN_UNROLL = False
+PROBE_BLOCK_Q = None  # override blockwise-attention q-block size in probes
+
+# ---- beyond-paper perf optimizations (EXPERIMENTS.md §Perf) ---------------
+# Baseline (paper-faithful jnp implementation) keeps these False.
+ATTN_BF16_STREAM = False   # keep QK^T/AV operands in bf16 with fp32
+                           # accumulation (preferred_element_type) instead
+                           # of materializing fp32 copies of K/V
+SEQ_PARALLEL_ATTN = False  # shard attention q-blocks over the model axis
+                           # (context parallelism) for archs whose head
+                           # counts don't divide the TP degree
+MOE_DECODE_DISPATCH = False  # decode MoE via capacity dispatch (all-to-all)
+                             # when T*topk >= num_experts, instead of
+                             # gathering expert weights per token
+WHERE_CACHE_UPDATE = False   # decode cache insertion via elementwise
+                             # where() instead of scatter: GSPMD partitions
+                             # it without the involuntary full
+                             # rematerialization scatters trigger on a
+                             # seq-sharded cache
+
+
+def scan_unroll():
+    return True if SCAN_UNROLL else 1
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global SCAN_UNROLL
+    old = SCAN_UNROLL
+    SCAN_UNROLL = True
+    try:
+        yield
+    finally:
+        SCAN_UNROLL = old

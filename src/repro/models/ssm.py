@@ -1,0 +1,253 @@
+"""Mamba2 (SSD — state-space duality) mixer, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm of arXiv:2405.21060:
+quadratic attention-like computation within chunks, linear recurrence in
+chunk states across chunks (``jax.lax.scan``; cross-chunk Pallas kernel in
+``repro.kernels.ssd_scan``).  Decode is the O(1) recurrent step with a
+(conv, ssm-state) cache.
+
+Shapes: x (B, L, H, P) with H = d_inner/headdim heads; B/C projections are
+shared across heads (n_groups = 1, as in Mamba2); state size N.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import P, shard
+from repro.models import flags
+from repro.models.layers import dense_init
+
+CONV_WIDTH = 4
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init_ssm(cfg: ModelConfig, key) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_nheads
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    dt_init = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inv-softplus
+    return {
+        # order: [z(di), x(di), B(N), C(N), dt(H)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H),
+                              ("embed", "ssm_inner"), dtype=dt),
+        "conv_w": P(jax.random.normal(ks[3], (CONV_WIDTH, conv_ch),
+                                      jnp.float32).astype(dt) * 0.2,
+                    ("conv", "ssm_inner")),
+        "conv_b": P(jnp.zeros((conv_ch,), dt), ("ssm_inner",)),
+        "A_log": P(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+                   ("ssm_heads",)),
+        "D": P(jnp.ones((H,), jnp.float32), ("ssm_heads",)),
+        "dt_bias": P(dt_bias, ("ssm_heads",)),
+        "gate_norm": P(jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+        "out_proj": dense_init(ks[1], (di, d), ("ssm_inner", "embed"),
+                               dtype=dt),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    di, N, H, Pd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads,
+                    cfg.ssm_headdim)
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, di + 2 * N), dt),
+        "ssm": jnp.zeros((batch, H, Pd, N), jnp.float32),
+    }
+
+
+def ssm_cache_logical_axes(cfg: ModelConfig) -> Dict:
+    return {"conv": ("batch", None, "ssm_inner"),
+            "ssm": ("batch", "ssm_heads", None, "state")}
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: (..., cl, h) -> (..., h, cl, cl) lower-tri segment sums."""
+    cl = a.shape[-2]
+    ah = jnp.moveaxis(a, -1, -2)                       # (..., h, cl)
+    cs = jnp.cumsum(ah, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]          # sum_(j..i]
+    mask = jnp.tril(jnp.ones((cl, cl), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False):
+    """Chunked SSD.
+
+    x: (b, l, h, p) fp32; dt: (b, l, h) fp32 (post-softplus);
+    A: (h,) fp32 (negative); Bm/Cm: (b, l, n) fp32.
+    Returns y (b, l, h, p), final_state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = z(x), z(dt), z(Bm), z(Cm)
+    L = x.shape[1]
+    c = L // chunk
+    xr = x.reshape(b, c, chunk, h, p)
+    dtr = dt.reshape(b, c, chunk, h)
+    Br = Bm.reshape(b, c, chunk, n)
+    Cr = Cm.reshape(b, c, chunk, n)
+
+    dA = dtr * A                                       # (b,c,cl,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (quadratic within chunk) -------------------------------
+    Lmat = jnp.exp(_segsum(dA))                        # (b,c,h,cl,cl)
+    G = jnp.einsum("bczn,bcln->bczl", Cr, Br)          # (b,c,cl_q,cl_k)
+    M = G[:, :, None] * Lmat                           # (b,c,h,z,l)
+    y_diag = jnp.einsum("bchzl,bclh,bclhp->bczhp", M, dtr, xr)
+
+    # ---- chunk states --------------------------------------------------------
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # (b,c,cl,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Br, decay_states * dtr, xr)           # (b,c,h,p,n)
+
+    # ---- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # (b,c,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32)
+          if initial_state is None else initial_state)
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        prev_states, final = _kops.ssd_state_scan(states, chunk_decay, s0)
+    else:
+        def step(carry, inp):
+            st, dec = inp
+            new = carry * dec[:, :, None, None] + st
+            return new, carry
+        final, prev_states = jax.lax.scan(
+            step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+            unroll=flags.scan_unroll())
+        prev_states = prev_states.swapaxes(0, 1)              # (b,c,h,p,n)
+
+    # ---- chunk-start contribution -------------------------------------------
+    state_decay = jnp.exp(dA_cs)                              # (b,c,cl,h)
+    y_off = jnp.einsum("bczn,bchpn,bczh->bczhp", Cr, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, L, h, p)[:, :l]
+    return y, final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """One recurrent step.  state: (b,h,p,n); x_t: (b,h,p); dt_t: (b,h);
+    B_t/C_t: (b,n).  Returns (new_state, y_t)."""
+    dA = jnp.exp(dt_t * A)                                    # (b,h)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+    new_state = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t)
+    return new_state, y
+
+
+# --------------------------------------------------------------------------
+# Full mixer (in_proj -> conv -> SSD -> gate -> out_proj)
+# --------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xc, dt
+
+
+def _causal_conv(xc, w, b):
+    """Depthwise causal conv.  xc: (B, L, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(xc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + xc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _gated_out(cfg, params, y, z, x_conv):
+    di = cfg.ssm_d_inner
+    H, Pd = cfg.ssm_nheads, cfg.ssm_headdim
+    y = y + params["D"][:, None] * x_conv.reshape(y.shape)
+    yf = y.reshape(*y.shape[:-2], di)
+    yf = yf * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(ms + 1e-6) * params["gate_norm"]
+    return yf.astype(jnp.dtype(cfg.dtype)) @ params["out_proj"]
+
+
+def ssm_forward(params, x, cfg: ModelConfig,
+                initial_state: Optional[Dict] = None,
+                return_cache: bool = False):
+    """x: (B, L, D) -> (y, cache|None).  Full-sequence (train/prefill)."""
+    Bsz, L, _ = x.shape
+    di, N, H, Pd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads,
+                    cfg.ssm_headdim)
+    zxbcdt = x @ params["in_proj"]
+    z, xc, dtl = _split_proj(cfg, zxbcdt)
+    xc = shard(xc, "batch", "seq", "ssm_inner")
+    xc = _causal_conv(xc, params["conv_w"], params["conv_b"])
+    xs = xc[..., :di].astype(jnp.float32)
+    Bm = xc[..., di:di + N].astype(jnp.float32)
+    Cm = xc[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dtl.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(Bsz, L, H, Pd)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    y, final = ssd_chunked(
+        xh, dt, A, Bm, Cm, cfg.ssm_chunk,
+        initial_state=None if initial_state is None
+        else initial_state["ssm"])
+    out = _gated_out(cfg, params, y, z, xs)
+    out = shard(out, "batch", "seq", "embed_act")
+    if not return_cache:
+        return out, None
+    # conv cache = last (W-1) *pre-activation* conv inputs
+    pre = zxbcdt[..., di:di + di + 2 * N]
+    if L >= CONV_WIDTH - 1:
+        conv_cache = pre[:, -(CONV_WIDTH - 1):, :]
+    else:
+        conv_cache = jnp.pad(pre, ((0, 0), (CONV_WIDTH - 1 - L, 0), (0, 0)))
+    return out, {"conv": conv_cache.astype(jnp.dtype(cfg.dtype)),
+                 "ssm": final}
+
+
+def ssm_decode(params, x, cfg: ModelConfig, cache: Dict):
+    """x: (B, 1, D) -> (y, new_cache)."""
+    Bsz = x.shape[0]
+    di, N, H, Pd = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads,
+                    cfg.ssm_headdim)
+    zxbcdt = (x @ params["in_proj"])[:, 0]                    # (B, ...)
+    z, xc_new, dtl = _split_proj(cfg, zxbcdt[:, None, :])
+    xc_new = xc_new[:, 0]
+    # conv over [cache, new]
+    window = jnp.concatenate([cache["conv"],
+                              xc_new[:, None, :].astype(cache["conv"].dtype)],
+                             axis=1)                          # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xs = conv_out[:, :di]
+    Bm = conv_out[:, di:di + N]
+    Cm = conv_out[:, di + N:]
+    dt = jax.nn.softplus(dtl[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    new_state, y = ssd_step(cache["ssm"], xs.reshape(Bsz, H, Pd), dt, A,
+                            Bm, Cm)
+    out = _gated_out(cfg, params, y[:, None].reshape(Bsz, 1, H, Pd),
+                     z, xs[:, None, :])
+    new_cache = {"conv": window[:, 1:], "ssm": new_state}
+    return out, new_cache

@@ -1,0 +1,169 @@
+"""Continuous-batching serving engine on real JAX models.
+
+The CPU-runnable counterpart of the simulator's instance model: fixed
+decode slots over a preallocated KV cache, policy-ordered admission
+(FCFS/EDF/PF/DPA from ``repro.core.scheduling``), prefill-then-decode.
+At smoke scale this runs actual forward passes; on TPU the same engine
+drives the sharded model (see launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import scheduling
+from repro.models import model as model_mod
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int
+    tier: str = "IW-N"
+    arrival: float = 0.0
+    ttft_deadline: float = math.inf
+    priority: int = 1
+    # outputs
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    ttft_step: Optional[int] = None
+    done_step: Optional[int] = None
+
+    @property
+    def deadline(self):
+        return self.ttft_deadline
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[ServeRequest] = None
+    pos: int = 0                      # next position to write
+    remaining: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 512, scheduler: str = "fcfs",
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.order_fn = scheduling.get_policy(scheduler)
+        self.greedy = greedy
+        self.queue: List[ServeRequest] = []
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.cache = model_mod.init_decode_cache(cfg, max_batch, max_seq)
+        self.step_count = 0
+
+        self._prefill = jax.jit(
+            lambda p, batch: model_mod.forward(cfg, p, batch,
+                                               return_cache=True)[:2])
+        self._decode = jax.jit(
+            lambda p, toks, cache, pos: model_mod.decode_step(
+                cfg, p, toks, cache, pos))
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, req: ServeRequest) -> None:
+        self.queue.append(req)
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.active > 0
+
+    # ----------------------------------------------------------------- steps
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        if not free or not self.queue:
+            return
+        self.queue = self.order_fn(self.queue, float(self.step_count))
+        while free and self.queue:
+            req = self.queue.pop(0)
+            slot = free.pop(0)
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: ServeRequest) -> None:
+        S = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.encoder_seq, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "vlm":
+            pn = min(self.cfg.num_patches, 4)
+            batch["patches"] = jnp.zeros((1, pn, self.cfg.d_model),
+                                         jnp.dtype(self.cfg.dtype))
+        logits, pcache = self._prefill(self.params, batch)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        offset = (batch["patches"].shape[1]
+                  if self.cfg.family == "vlm" else 0)
+        self.cache = _write_slot(self.cache, pcache, slot)
+        st = self.slots[slot]
+        st.req = req
+        st.pos = S + offset
+        st.remaining = req.max_new_tokens - 1
+        req.tokens.append(next_tok)
+        req.ttft_step = self.step_count
+        if st.remaining <= 0:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        st = self.slots[slot]
+        st.req.done_step = self.step_count
+        st.req = None
+        st.pos = 0
+        st.remaining = 0
+
+    def step(self) -> None:
+        """One engine iteration: admit waiting requests, decode one token
+        for every active slot."""
+        self.step_count += 1
+        self._admit()
+        if self.active == 0:
+            return
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.req is not None:
+                toks[i, 0] = s.req.tokens[-1]
+                pos[i] = s.pos
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                          self.cache, jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            s.req.tokens.append(int(nxt[i]))
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0 or s.pos >= self.max_seq - 1:
+                self._finish(i)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        while self.has_work and self.step_count < max_steps:
+            self.step()
+
+
+def _write_slot(cache, prefill_cache, slot: int):
+    """Write a single-request prefill cache into decode-cache slot `slot`.
+
+    Decode leaves are stacked (L, B, W, ...); prefill leaves are
+    (L, 1, S, ...): write at [0, slot, 0, ...].
+    """
+    def merge(dst, src):
+        src = src.astype(dst.dtype)
+        start = (0, slot) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src, start)
+
+    return jax.tree.map(merge, cache, prefill_cache)

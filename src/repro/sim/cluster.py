@@ -1,0 +1,228 @@
+"""Cluster state: regions × model endpoints × instances, spot pool,
+provisioning delays, instance-hour accounting.
+
+Provisioning timeline (§2.3/§4): scale-out prefers a spot instance that
+last hosted the *same* model (~1 min role flip); otherwise a spot VM of
+another model is reclaimed and redeployed (~10 min local weights, ~2 h
+remote); scale-in drains the instance and donates it to the spot pool.
+Time spent provisioning is counted as wasted GPU time; time in the spot
+pool is donated (leased) time, a recovered opportunity cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.scaling import EndpointView, ScaleAction
+from repro.sim.instance import Instance
+from repro.sim.perfmodel import PerfProfile
+from repro.sim.types import Request
+
+Key = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class PendingInstance:
+    ready_at: float
+    issued_at: float
+    model: str
+    region: str
+    pool: str
+
+
+@dataclasses.dataclass
+class SpotVM:
+    last_model: Optional[str]
+    since: float
+
+
+class Endpoint:
+    """All instances of one model in one region (optionally per pool)."""
+
+    def __init__(self, model: str, region: str, profile: PerfProfile,
+                 order_fn: Callable, pool: str = "unified"):
+        self.model = model
+        self.region = region
+        self.profile = profile
+        self.order_fn = order_fn
+        self.pool = pool
+        self.instances: Dict[str, Instance] = {}
+        self.pending: List[PendingInstance] = []
+        self._iid = itertools.count()
+
+    def new_instance(self, now: float) -> Instance:
+        iid = f"{self.model}/{self.region}/{self.pool}/{next(self._iid)}"
+        inst = Instance(iid, self.model, self.region, self.profile,
+                        self.order_fn)
+        inst.acquired_at = now
+        self.instances[iid] = inst
+        return inst
+
+    @property
+    def util(self) -> float:
+        live = [i for i in self.instances.values() if not i.draining]
+        if not live:
+            return 1.0  # no capacity == saturated for routing purposes
+        return sum(i.util for i in live) / len(live)
+
+    def live_count(self) -> int:
+        return sum(1 for i in self.instances.values() if not i.draining)
+
+    def pick_jsq(self) -> Optional[Instance]:
+        cands = [i for i in self.instances.values() if not i.draining]
+        if not cands:
+            return None
+        return min(cands, key=lambda i: (i.remaining_tokens(), i.iid))
+
+
+class Cluster:
+    def __init__(self, regions: List[str], models: List[str],
+                 profiles: Dict[str, PerfProfile], order_fn: Callable,
+                 initial_instances: int = 20, spot_spare: int = 10,
+                 pools: Tuple[str, ...] = ("unified",),
+                 initial_per_pool: Optional[Dict[str, int]] = None,
+                 spot_retag_time: float = 600.0):
+        # spot VMs donated to external (preemptible) customers are
+        # redeployed with the customer's model after ~spot_retag_time;
+        # reclaiming them then costs a full model redeploy (~10 min)
+        # instead of the 1-min same-model role flip.  Frequent reactive
+        # churn therefore pays cold starts that rare, forecast-driven
+        # scaling amortizes (Fig. 1 / §7.2.4 of the paper).
+        self.spot_retag_time = spot_retag_time
+        self.regions = regions
+        self.models = models
+        self.profiles = profiles
+        self.endpoints: Dict[Tuple[str, str, str], Endpoint] = {}
+        self.spot: Dict[str, List[SpotVM]] = {r: [] for r in regions}
+
+        # accounting ---------------------------------------------------------
+        self.instance_seconds: Dict[Key, float] = {}
+        self.wasted_seconds: Dict[Key, float] = {}   # provisioning
+        self.spot_seconds: Dict[str, float] = {r: 0.0 for r in regions}
+        self.scale_out_events = 0
+        self.scale_in_events = 0
+        self._last_acct = 0.0
+
+        for r in regions:
+            for m in models:
+                for pool in pools:
+                    ep = Endpoint(m, r, profiles[m], order_fn, pool)
+                    self.endpoints[(m, r, pool)] = ep
+                    n0 = (initial_per_pool or {}).get(
+                        pool, initial_instances // max(len(pools), 1))
+                    for _ in range(n0):
+                        ep.new_instance(0.0)
+                self.instance_seconds[(m, r)] = 0.0
+                self.wasted_seconds[(m, r)] = 0.0
+            self.spot[r] = [SpotVM(None, 0.0) for _ in range(spot_spare)]
+        self.pools = pools
+
+    # ------------------------------------------------------------ accounting
+    def accrue(self, now: float) -> None:
+        dt = now - self._last_acct
+        if dt <= 0:
+            return
+        for (m, r, pool), ep in self.endpoints.items():
+            cnt = len(ep.instances) + len(ep.pending)
+            self.instance_seconds[(m, r)] += dt * cnt
+            self.wasted_seconds[(m, r)] += dt * len(ep.pending)
+        for r, pool in self.spot.items():
+            self.spot_seconds[r] += dt * len(pool)
+        self._last_acct = now
+
+    # --------------------------------------------------------------- lookups
+    def endpoint(self, model: str, region: str, pool: str = "unified"
+                 ) -> Endpoint:
+        return self.endpoints[(model, region, pool)]
+
+    def region_utils(self, model: str, pool: str = "unified"
+                     ) -> Dict[str, float]:
+        return {r: self.endpoints[(model, r, pool)].util
+                for r in self.regions}
+
+    def views(self, observed_tps: Dict[Key, float]) -> List[EndpointView]:
+        out = []
+        for (m, r, pool), ep in self.endpoints.items():
+            out.append(EndpointView(
+                model=m, region=r, util=ep.util,
+                instances=ep.live_count(), pending=len(ep.pending),
+                observed_tps=observed_tps.get((m, r), 0.0), pool=pool))
+        return out
+
+    # ---------------------------------------------------------------- scaling
+    def apply_action(self, act: ScaleAction, now: float
+                     ) -> List[Tuple[str, float, PendingInstance]]:
+        """Returns provisioning events [("instance_ready", t, pending)]."""
+        self.accrue(now)
+        ep = self.endpoints[(act.model, act.region, act.pool)]
+        events = []
+        if act.delta > 0:
+            for _ in range(act.delta):
+                delay = self._acquire_delay(act.model, act.region, now)
+                if delay is None:
+                    break  # no VM available in region
+                p = PendingInstance(now + delay, now, act.model, act.region,
+                                    act.pool)
+                ep.pending.append(p)
+                events.append(("instance_ready", now + delay, p))
+                self.scale_out_events += 1
+        else:
+            for _ in range(-act.delta):
+                victim = self._pick_drain(ep)
+                if victim is None:
+                    break
+                victim.draining = True
+                self.scale_in_events += 1
+        return events
+
+    def _acquire_delay(self, model: str, region: str, now: float
+                       ) -> Optional[float]:
+        pool = self.spot[region]
+        if not pool:
+            return None
+        prof = self.profiles[model]
+        same = next((v for v in pool if v.last_model == model
+                     and now - v.since < self.spot_retag_time), None)
+        if same is not None:
+            pool.remove(same)
+            return prof.spot_swap_time
+        pool.pop(0)
+        return prof.load_time_local
+
+    def _pick_drain(self, ep: Endpoint) -> Optional[Instance]:
+        live = [i for i in ep.instances.values() if not i.draining]
+        if not live:
+            return None
+        return min(live, key=lambda i: i.reserved_tokens)
+
+    def on_instance_ready(self, p: PendingInstance, now: float) -> Instance:
+        self.accrue(now)
+        ep = self.endpoints[(p.model, p.region, p.pool)]
+        if p in ep.pending:
+            ep.pending.remove(p)
+        return ep.new_instance(now)
+
+    def reap_drained(self, now: float) -> int:
+        """Return drained+idle instances to the regional spot pool."""
+        self.accrue(now)
+        n = 0
+        for (m, r, pool), ep in self.endpoints.items():
+            done = [i for i in ep.instances.values()
+                    if i.draining and i.idle]
+            for inst in done:
+                del ep.instances[inst.iid]
+                self.spot[r].append(SpotVM(m, now))
+                n += 1
+        return n
+
+    # ----------------------------------------------------------------- stats
+    def instance_hours(self) -> Dict[Key, float]:
+        return {k: v / 3600.0 for k, v in self.instance_seconds.items()}
+
+    def wasted_hours(self) -> Dict[Key, float]:
+        return {k: v / 3600.0 for k, v in self.wasted_seconds.items()}
+
+    def spot_hours(self) -> Dict[str, float]:
+        return {r: v / 3600.0 for r, v in self.spot_seconds.items()}

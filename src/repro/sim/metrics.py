@@ -1,0 +1,99 @@
+"""Metrics collection & reporting: TTFT/E2E percentiles, SLA violations,
+instance-hours, wasted scaling hours, spot donations, memory-util traces."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sim.types import Request, TIER_IWF, TIER_IWN, TIER_NIW, TTFT_SLA
+
+Key = Tuple[str, str]
+
+
+def _pct(vals: Sequence[float], q: float) -> float:
+    vals = [v for v in vals if not math.isnan(v)]
+    return float(np.percentile(vals, q)) if vals else math.nan
+
+
+@dataclasses.dataclass
+class Report:
+    name: str
+    ttft: Dict[str, Dict[str, float]]          # tier -> {p50,p75,p95,mean}
+    e2e: Dict[str, Dict[str, float]]
+    sla_violations: Dict[str, float]           # tier -> fraction
+    completed: Dict[str, int]
+    dropped: Dict[str, int]
+    instance_hours: Dict[Key, float]
+    wasted_hours: Dict[Key, float]
+    spot_hours: Dict[str, float]
+    scale_out_events: int
+    scale_in_events: int
+    util_trace: Dict[Key, List[Tuple[float, float, int]]]  # t, util, count
+
+    # ------------------------------------------------------------ summaries
+    def total_instance_hours(self) -> float:
+        return sum(self.instance_hours.values())
+
+    def total_wasted_hours(self) -> float:
+        return sum(self.wasted_hours.values())
+
+    def total_spot_hours(self) -> float:
+        return sum(self.spot_hours.values())
+
+    def summary(self) -> str:
+        lines = [f"== {self.name} =="]
+        for tier in (TIER_IWF, TIER_IWN, TIER_NIW):
+            if tier not in self.ttft:
+                continue
+            t, e = self.ttft[tier], self.e2e[tier]
+            lines.append(
+                f"  {tier:5s} n={self.completed.get(tier, 0):7d} "
+                f"TTFT p50={t['p50']:.2f}s p95={t['p95']:.2f}s | "
+                f"E2E p95={e['p95']:.1f}s | "
+                f"SLA viol={self.sla_violations.get(tier, 0)*100:.1f}%")
+        lines.append(
+            f"  instance-hours={self.total_instance_hours():.1f} "
+            f"wasted={self.total_wasted_hours():.1f} "
+            f"spot-donated={self.total_spot_hours():.1f} "
+            f"scale-out={self.scale_out_events} in={self.scale_in_events}")
+        return "\n".join(lines)
+
+
+def build_report(name: str, requests: Sequence[Request], cluster,
+                 util_trace: Dict[Key, List[Tuple[float, float, int]]]
+                 ) -> Report:
+    ttft, e2e, viol, comp, drop = {}, {}, {}, {}, {}
+    for tier in (TIER_IWF, TIER_IWN, TIER_NIW):
+        rs = [r for r in requests if r.tier == tier]
+        if not rs:
+            continue
+        done = [r for r in rs if not math.isnan(r.e2e)]
+        comp[tier] = len(done)
+        drop[tier] = len(rs) - len(done)
+        tt = [r.ttft for r in done]
+        ee = [r.e2e for r in done]
+        ttft[tier] = {"p50": _pct(tt, 50), "p75": _pct(tt, 75),
+                      "p95": _pct(tt, 95),
+                      "mean": float(np.mean(tt)) if tt else math.nan}
+        e2e[tier] = {"p50": _pct(ee, 50), "p75": _pct(ee, 75),
+                     "p95": _pct(ee, 95),
+                     "mean": float(np.mean(ee)) if ee else math.nan}
+        if tier in TTFT_SLA:
+            bad = sum(1 for r in rs
+                      if math.isnan(r.ttft) or r.ttft > TTFT_SLA[tier])
+            viol[tier] = bad / len(rs)
+        else:
+            bad = sum(1 for r in rs if not r.deadline_ok())
+            viol[tier] = bad / len(rs)
+    return Report(
+        name=name, ttft=ttft, e2e=e2e, sla_violations=viol,
+        completed=comp, dropped=drop,
+        instance_hours=cluster.instance_hours(),
+        wasted_hours=cluster.wasted_hours(),
+        spot_hours=cluster.spot_hours(),
+        scale_out_events=cluster.scale_out_events,
+        scale_in_events=cluster.scale_in_events,
+        util_trace=util_trace)

@@ -1,0 +1,287 @@
+"""Discrete-event simulator: the paper's evaluation harness (§7.1),
+extending the SplitWise instance model to regions, endpoints, routing,
+the NIW queue manager, reactive/predictive scaling and the hourly
+forecast+ILP controller.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import scheduling
+from repro.core.chiron import ChironPolicy
+from repro.core.controller import SageServeController
+from repro.core.queue_manager import QueueManager
+from repro.core.routing import route_global
+from repro.core.scaling import EndpointView, ScaleAction, ScalingPolicy
+from repro.sim.cluster import Cluster, PendingInstance
+from repro.sim.instance import Instance
+from repro.sim.metrics import Report, build_report
+from repro.sim.perfmodel import PROFILES, PerfProfile
+from repro.sim.types import Request, TIER_NIW
+
+Key = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class SimConfig:
+    policy: ScalingPolicy
+    scheduler: str = "fcfs"
+    controller: Optional[SageServeController] = None
+    queue_manager: Optional[QueueManager] = None
+    siloed: bool = False                  # separate IW/NIW pools
+    initial_instances: int = 20           # per (model, region) total
+    siloed_iw: int = 16
+    siloed_niw: int = 4
+    spot_spare: int = 10
+    tick: float = 15.0
+    sample_every: float = 60.0
+    route_threshold: float = 0.7
+    qm_signal_thresh: float = 0.6
+    tps_window: float = 60.0
+    drain_grace: float = 6 * 3600.0       # sim horizon past last arrival
+
+
+class Simulation:
+    def __init__(self, requests: Sequence[Request], cfg: SimConfig,
+                 models: Optional[List[str]] = None,
+                 regions: Optional[List[str]] = None,
+                 profiles: Optional[Dict[str, PerfProfile]] = None,
+                 name: str = "sim"):
+        self.cfg = cfg
+        self.name = name
+        self.requests = list(requests)
+        self.models = models or sorted({r.model for r in requests})
+        self.regions = regions or sorted({r.region for r in requests})
+        self.profiles = profiles or {m: PROFILES[m] for m in self.models}
+        order_fn = scheduling.get_policy(cfg.scheduler)
+
+        pools = ("IW", "NIW") if cfg.siloed else ("unified",)
+        per_pool = ({"IW": cfg.siloed_iw, "NIW": cfg.siloed_niw}
+                    if cfg.siloed else
+                    {"unified": cfg.initial_instances})
+        self.cluster = Cluster(self.regions, self.models, self.profiles,
+                               order_fn, pools=pools,
+                               initial_per_pool=per_pool,
+                               spot_spare=cfg.spot_spare)
+
+        self._heap: List = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.last_arrival = (max(r.arrival for r in requests)
+                             if requests else 0.0)
+
+        # observed input-TPS history per (model, region), window buckets
+        self._tps_buckets: Dict[Key, defaultdict] = {
+            (m, r): defaultdict(float)
+            for m in self.models for r in self.regions}
+        self._niw_tps_buckets: Dict[Key, defaultdict] = {
+            (m, r): defaultdict(float)
+            for m in self.models for r in self.regions}
+        self.util_trace: Dict[Key, List[Tuple[float, float, int]]] = \
+            defaultdict(list)
+        self._next_sample = 0.0
+
+    # --------------------------------------------------------------- helpers
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _pool_for(self, req: Request) -> str:
+        if not self.cfg.siloed:
+            return "unified"
+        return "NIW" if req.tier == TIER_NIW else "IW"
+
+    def _note_tps(self, req: Request, region: str):
+        b = int(req.arrival / self.cfg.tps_window)
+        self._tps_buckets[(req.model, region)][b] += (
+            req.prompt_tokens / self.cfg.tps_window)
+        if req.tier == TIER_NIW:
+            self._niw_tps_buckets[(req.model, region)][b] += (
+                req.prompt_tokens / self.cfg.tps_window)
+
+    def observed_tps(self, horizon: float = 300.0) -> Dict[Key, float]:
+        """Mean input TPS over the trailing `horizon` seconds."""
+        w = self.cfg.tps_window
+        b_hi = int(self.now / w)
+        nb = max(int(horizon / w), 1)
+        out = {}
+        for key, buckets in self._tps_buckets.items():
+            out[key] = sum(buckets.get(b, 0.0)
+                           for b in range(b_hi - nb + 1, b_hi + 1)) / nb
+        return out
+
+    def history_series(self) -> Dict[Key, np.ndarray]:
+        w = self.cfg.tps_window
+        b_hi = int(self.now / w)
+        out = {}
+        for key, buckets in self._tps_buckets.items():
+            out[key] = np.array([buckets.get(b, 0.0)
+                                 for b in range(0, b_hi)])
+        return out
+
+    def niw_last_hour(self) -> Dict[Key, float]:
+        w = self.cfg.tps_window
+        b_hi = int(self.now / w)
+        nb = max(int(3600.0 / w), 1)
+        return {key: sum(b.get(i, 0.0) for i in range(b_hi - nb, b_hi)) / nb
+                for key, b in self._niw_tps_buckets.items()}
+
+    # --------------------------------------------------------------- routing
+    def _route_and_enqueue(self, req: Request, forced_region: str = None):
+        pool = self._pool_for(req)
+        if forced_region is not None:
+            region = forced_region
+        else:
+            utils = {r: self.cluster.endpoint(req.model, r, pool).util
+                     for r in self.regions}
+            pref = [req.region] + [r for r in self.regions
+                                   if r != req.region]
+            region = route_global(utils, pref, self.cfg.route_threshold)
+        ep = self.cluster.endpoint(req.model, region, pool)
+        inst = ep.pick_jsq()
+        if inst is None:
+            self._push(self.now + 5.0, "retry", req)
+            return
+        ev = inst.enqueue(req, self.now)
+        if ev:
+            self._push(ev[1], "prefill_done", inst)
+        # reactive per-request trigger
+        view = EndpointView(req.model, region, ep.util, ep.live_count(),
+                            len(ep.pending), 0.0, pool)
+        for act in self.cfg.policy.on_request(view, self.now):
+            self._apply_actions([act])
+
+    def _apply_actions(self, acts: List[ScaleAction]):
+        for act in acts:
+            if self.cfg.siloed and act.pool == "unified":
+                act = dataclasses.replace(act, pool="IW")
+            for kind, t, payload in self.cluster.apply_action(act, self.now):
+                self._push(t, kind, payload)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> Report:
+        cfg = self.cfg
+        for req in self.requests:
+            self._push(req.arrival, "arrival", req)
+        self._push(cfg.tick, "tick", None)
+        self._push(3600.0, "hour", None)
+        horizon = self.last_arrival + cfg.drain_grace
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > horizon and kind in ("tick", "hour"):
+                if any(k not in ("tick", "hour") for (_, _, k, _)
+                       in self._heap):
+                    pass  # still work in flight; keep ticking
+                else:
+                    break
+            self.now = max(self.now, t)
+
+            if kind == "arrival":
+                req: Request = payload
+                if req.tier == TIER_NIW and cfg.queue_manager is not None:
+                    self._note_tps(req, req.region)
+                    cfg.queue_manager.submit(req)
+                else:
+                    region0 = req.region
+                    self._note_tps(req, region0)
+                    self._route_and_enqueue(req)
+
+            elif kind == "retry":
+                self._route_and_enqueue(payload)
+
+            elif kind == "prefill_done":
+                inst: Instance = payload
+                if inst.prefilling is None:
+                    continue  # instance was drained/reaped
+                req, finish, nxt = inst.on_prefill_done(self.now)
+                self._push(finish, "decode_done", (inst, req))
+                if nxt:
+                    self._push(nxt[1], "prefill_done", inst)
+
+            elif kind == "decode_done":
+                inst, req = payload
+                nxt = inst.on_decode_done(req, self.now)
+                if nxt:
+                    self._push(nxt[1], "prefill_done", inst)
+
+            elif kind == "instance_ready":
+                p: PendingInstance = payload
+                inst = self.cluster.on_instance_ready(p, self.now)
+                ev = inst.maybe_start_prefill(self.now)
+                if ev:
+                    self._push(ev[1], "prefill_done", inst)
+
+            elif kind == "tick":
+                self._on_tick()
+                if self._heap or self.now < horizon:
+                    self._push(self.now + cfg.tick, "tick", None)
+
+            elif kind == "hour":
+                self._on_hour()
+                if self.now + 3600.0 < horizon:
+                    self._push(self.now + 3600.0, "hour", None)
+
+        self.cluster.accrue(self.now)
+        return build_report(self.name, self.requests, self.cluster,
+                            dict(self.util_trace))
+
+    # ----------------------------------------------------------------- ticks
+    def _on_tick(self):
+        cfg = self.cfg
+        self.cluster.accrue(self.now)
+        self.cluster.reap_drained(self.now)
+        observed = self.observed_tps()
+        views = self.cluster.views(observed)
+        if isinstance(cfg.policy, ChironPolicy) and cfg.queue_manager:
+            for m in self.models:
+                backlog = cfg.queue_manager.backlog_tokens(m)
+                for r in self.regions:
+                    cfg.policy.note_backlog(m, r,
+                                            backlog / len(self.regions))
+        acts = cfg.policy.on_tick(views, self.now)
+        if acts:
+            self._apply_actions(acts)
+
+        # NIW queue-manager capacity signals (§6.2)
+        if cfg.queue_manager is not None:
+            for m in self.models:
+                for r in self.regions:
+                    pool = "NIW" if cfg.siloed else "unified"
+                    ep = self.cluster.endpoint(m, r, pool)
+                    u = ep.util
+                    live = ep.live_count()
+                    if u < cfg.qm_signal_thresh and live > 0:
+                        for req in cfg.queue_manager.on_capacity_signal(
+                                m, r, u, self.now, live_instances=live):
+                            self._route_and_enqueue(req, forced_region=r)
+            for req in cfg.queue_manager.force_release_expiring(self.now):
+                self._route_and_enqueue(req)
+
+        # utilization sampling
+        if self.now >= self._next_sample:
+            for (m, r, pool), ep in self.cluster.endpoints.items():
+                self.util_trace[(m, r)].append(
+                    (self.now, ep.util,
+                     ep.live_count() + len(ep.pending)))
+            self._next_sample = self.now + cfg.sample_every
+
+    def _on_hour(self):
+        cfg = self.cfg
+        if cfg.controller is None:
+            return
+        instances = {}
+        for (m, r, pool), ep in self.cluster.endpoints.items():
+            instances[(m, r)] = instances.get((m, r), 0) + \
+                ep.live_count() + len(ep.pending)
+        targets, forecasts = cfg.controller.plan(
+            self.now, instances, self.history_series(), self.niw_last_hour())
+        acts = cfg.policy.set_targets(targets, forecasts, self.now)
+        if acts:
+            self._apply_actions(acts)

@@ -1,0 +1,62 @@
+"""Checkpointing: pytree <-> npz with key-path flattening (no orbax)."""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    arr = np.asarray(leaf)
+    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+        # npz has no bf16: store as float32 (restore casts back)
+        arr = np.asarray(jax.numpy.asarray(leaf, jax.numpy.float32))
+    return arr
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = _to_numpy(leaf)
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    if hasattr(p, "name"):
+        return f"k:{p.name}"
+    return f"?:{p}"
+
+
+def save(path: str, tree, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like) -> Tuple[Any, Optional[int]]:
+    """Restore into the structure of `like` (a template pytree)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    step = int(data["__step__"]) if "__step__" in data else None
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(_fmt(p) for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype))
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,63 @@
+"""Training loop: jit'd train_step factory + driver with checkpointing."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as model_mod
+from repro.train import checkpoint as ckpt_mod
+from repro.train.optimizer import AdamW, AdamWState, apply_updates, global_norm
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, remat: bool = False,
+                    donate: bool = True) -> Callable:
+    def step_fn(params, opt_state: AdamWState, batch):
+        def loss(p):
+            return model_mod.loss_fn(cfg, p, batch, remat=remat)
+        lv, grads = jax.value_and_grad(loss)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": lv, "grad_norm": global_norm(grads)}
+        return params, opt_state, metrics
+
+    kw = {"donate_argnums": (0, 1)} if donate else {}
+    return jax.jit(step_fn, **kw)
+
+
+def train(cfg: ModelConfig, steps: int = 100, data: Optional[DataConfig]
+          = None, opt: Optional[AdamW] = None, seed: int = 0,
+          ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+          log_every: int = 10, remat: bool = False,
+          verbose: bool = True) -> Dict[str, Any]:
+    from repro.dist.sharding import unbox
+
+    data = data or DataConfig()
+    opt = opt or AdamW()
+    params = unbox(model_mod.init(cfg, jax.random.PRNGKey(seed)))
+    opt_state = opt.init(params)
+    step_fn = make_train_step(cfg, opt, remat=remat)
+    ds = SyntheticLM(cfg, data)
+
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(ds.batches(steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            lv = float(metrics["loss"])
+            losses.append((i, lv))
+            if verbose:
+                print(f"step {i:5d}  loss {lv:.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"{(time.time()-t0):.1f}s", flush=True)
+        if ckpt_path and ckpt_every and i and i % ckpt_every == 0:
+            ckpt_mod.save(ckpt_path, params, step=i)
+    if ckpt_path:
+        ckpt_mod.save(ckpt_path, params, step=steps)
+    return {"params": params, "opt_state": opt_state, "losses": losses}

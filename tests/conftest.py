@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces 512
+# host devices (and only in its own process).
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", "")
+
+# Deterministic hypothesis runs: no example database (stale examples from
+# earlier strategy definitions must not replay).
+from hypothesis import settings
+
+settings.register_profile("repro", database=None, deadline=None)
+settings.load_profile("repro")

@@ -1,0 +1,39 @@
+"""ARIMA forecaster: accuracy on diurnal series, AIC selection."""
+import numpy as np
+
+from repro.core.forecast import ARIMAForecaster, select_order
+
+
+def diurnal_series(days=10, noise=30.0, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(24 * days, dtype=float)
+    return (1000 + 500 * np.sin(2 * np.pi * (t % 24) / 24 - 1.3)
+            + 0.3 * t + rng.normal(0, noise, t.shape))
+
+
+def test_seasonal_arima_beats_naive():
+    y = diurnal_series()
+    train, test = y[:-24], y[-24:]
+    f = ARIMAForecaster(p=2, d=1, q=1, seasonal_period=24,
+                        fit_steps=250).fit(train)
+    pred = f.forecast(24)
+    mape = np.mean(np.abs(pred - test) / np.abs(test))
+    naive = np.mean(np.abs(train[-1] - test) / np.abs(test))
+    assert mape < 0.2
+    assert mape < naive
+
+
+def test_forecast_nonnegative_and_shape():
+    f = ARIMAForecaster(p=1, d=1, q=1, fit_steps=100).fit(
+        np.maximum(diurnal_series(days=4) - 900, 0))
+    out = f.forecast(12)
+    assert out.shape == (12,)
+    assert (out >= 0).all()
+
+
+def test_aic_selection_runs():
+    y = diurnal_series(days=6)
+    best = select_order(y, grid=((1, 1, 0), (2, 1, 1)), seasonal_period=24,
+                        fit_steps=120)
+    assert best.params is not None
+    assert np.isfinite(best.aic())

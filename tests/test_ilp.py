@@ -1,0 +1,65 @@
+"""ILP solver: own branch-and-bound cross-checked against HiGHS MIP;
+provisioner solutions satisfy the §5 constraints."""
+import numpy as np
+import pytest
+
+from repro.core.ilp import solve_ilp
+from repro.core.provisioner import ProvisionProblem, solve
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_bnb_matches_milp_small(seed):
+    rng = np.random.default_rng(seed)
+    n = 6
+    c = rng.uniform(-5, 5, n)
+    A = rng.uniform(-1, 3, (4, n))
+    b = rng.uniform(5, 20, 4)
+    bounds = [(0, 10)] * n
+    r1 = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="milp")
+    r2 = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="bnb",
+                   max_nodes=5000)
+    assert r1.status == "optimal"
+    if r2.status == "optimal":
+        assert abs(r1.objective - r2.objective) < 1e-5
+        assert (A @ r2.x <= b + 1e-6).all()
+
+
+def test_infeasible_detected():
+    c = np.array([1.0])
+    A = np.array([[1.0], [-1.0]])
+    b = np.array([-2.0, -2.0])  # x <= -2 and x >= 2
+    r = solve_ilp(c, A_ub=A, b_ub=b, bounds=[(None, None)])
+    assert r.status == "infeasible"
+
+
+def _random_problem(seed, l=3, r=2, g=1):
+    rng = np.random.default_rng(seed)
+    return ProvisionProblem(
+        n=rng.integers(2, 12, (l, r, g)).astype(float),
+        theta=rng.uniform(800, 4000, (l, g)),
+        alpha=rng.uniform(50, 120, (g,)),
+        sigma=rng.uniform(5, 30, (l, g)),
+        rho_peak=rng.uniform(2000, 40000, (l, r)),
+        epsilon=0.8, region_cap=np.full(r, 600.0), min_instances=2)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_provisioner_constraints_hold(seed):
+    prob = _random_problem(seed)
+    sol = solve(prob)
+    assert sol.status in ("optimal", "feasible")
+    npost = prob.n + sol.delta
+    assert (npost >= -1e-9).all()
+    cov = np.einsum("irk,ik->ir", npost, prob.theta)
+    assert (cov >= prob.epsilon * prob.rho_peak - 1e-6).all()
+    assert (cov.sum(1) >= prob.rho_peak.sum(1) - 1e-6).all()
+    assert (npost.sum(-1) >= prob.min_instances - 1e-9).all()
+    # integrality
+    assert np.allclose(sol.delta, np.round(sol.delta))
+
+
+def test_scale_in_when_overprovisioned():
+    prob = _random_problem(1)
+    prob.rho_peak[:] = 100.0   # tiny demand, big fleet
+    sol = solve(prob)
+    assert sol.delta.sum() < 0  # deallocates

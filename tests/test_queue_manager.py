@@ -1,0 +1,74 @@
+"""NIW Queue Manager: conservation, thresholds, promotion."""
+import dataclasses
+
+from repro.core.queue_manager import QueueManager
+
+
+@dataclasses.dataclass
+class R:
+    model: str
+    arrival: float
+    deadline: float
+    prompt_tokens: int = 100
+    output_tokens: int = 10
+    region: str = ""
+    priority: int = 1
+
+
+def mk(n, model="m", t0=0.0):
+    return [R(model, t0 + i, t0 + i + 24 * 3600.0) for i in range(n)]
+
+
+def test_release_counts_by_threshold():
+    qm = QueueManager()
+    for r in mk(10):
+        qm.submit(r)
+    assert len(qm.on_capacity_signal("m", "r1", util=0.65, now=0.0)) == 0
+    assert len(qm.on_capacity_signal("m", "r1", util=0.55, now=0.0)) == 1
+    assert len(qm.on_capacity_signal("m", "r1", util=0.45, now=0.0)) == 2
+    out = qm.on_capacity_signal("m", "r1", util=0.45, now=0.0,
+                                live_instances=3)
+    assert len(out) == 6
+    assert all(r.region == "r1" for r in out)
+
+
+def test_conservation():
+    qm = QueueManager()
+    reqs = mk(25)
+    for r in reqs:
+        qm.submit(r)
+    got = []
+    t = 0.0
+    while qm.depth() > 0:
+        got += qm.on_capacity_signal("m", "r", 0.4, t, live_instances=2)
+        t += 15.0
+    assert len(got) == 25
+    assert qm.released == 25
+    assert {id(r) for r in got} == {id(r) for r in reqs}
+
+
+def test_age_promotion():
+    qm = QueueManager(promote_age=100.0)
+    for r in mk(3):
+        qm.submit(r)
+    out = qm.on_capacity_signal("m", "r", 0.4, now=500.0, live_instances=2)
+    assert all(r.priority == 0 for r in out)   # older than 100s
+
+
+def test_deadline_force_release():
+    qm = QueueManager(deadline_slack=3600.0)
+    r = R("m", arrival=0.0, deadline=1800.0)
+    qm.submit(r)
+    out = qm.force_release_expiring(now=0.0)
+    assert out == [r]
+    assert r.priority == 0
+    assert qm.depth() == 0
+
+
+def test_backlog_tokens_tracked():
+    qm = QueueManager()
+    for r in mk(4):
+        qm.submit(r)
+    assert qm.backlog_tokens("m") == 4 * 110
+    qm.on_capacity_signal("m", "r", 0.4, 0.0)
+    assert qm.backlog_tokens("m") == 2 * 110

@@ -1,0 +1,61 @@
+"""Scaling policies + routing logic."""
+from repro.core.routing import pick_endpoint, route_global, route_jsq
+from repro.core.scaling import EndpointView, LTPolicy, ReactivePolicy
+
+
+def view(util, inst=4, pending=0, tps=0.0, model="m", region="r"):
+    return EndpointView(model, region, util, inst, pending, tps)
+
+
+def test_reactive_thresholds_and_cooldown():
+    p = ReactivePolicy(up=0.7, down=0.3, cooldown=15.0, min_instances=2)
+    assert p.on_request(view(0.75), now=0.0)[0].delta == 1
+    assert p.on_request(view(0.95), now=5.0) == []       # cooldown
+    assert p.on_request(view(0.2), now=20.0)[0].delta == -1
+    assert p.on_request(view(0.2, inst=2), now=40.0) == []  # min floor
+    assert p.on_request(view(0.5), now=60.0) == []        # dead band
+
+
+def test_lt_i_jumps_to_target():
+    p = LTPolicy(mode="I")
+    p.set_targets({("m", "r"): 7}, {("m", "r"): 1000.0}, now=0.0)
+    acts = p.on_tick([view(0.5, inst=4)], now=10.0)
+    assert acts[0].delta == 3
+    acts = p.on_tick([view(0.5, inst=9)], now=20.0)
+    assert acts[0].delta == -2
+
+
+def test_lt_u_defers_on_util():
+    p = LTPolicy(mode="U")
+    p.set_targets({("m", "r"): 7}, {("m", "r"): 1000.0}, now=0.0)
+    assert p.on_tick([view(0.5, inst=4)], now=10.0) == []     # no breach
+    assert p.on_tick([view(0.8, inst=4)], now=20.0)[0].delta == 1
+    assert p.on_tick([view(0.8, inst=7)], now=40.0) == []     # at target
+    assert p.on_tick([view(0.2, inst=9)], now=60.0)[0].delta == -1
+
+
+def test_lt_ua_escape_hatch():
+    p = LTPolicy(mode="UA", hour=3600.0, ua_window=1200.0)
+    p.set_targets({("m", "r"): 4}, {("m", "r"): 1000.0}, now=0.0)
+    # inside last 20 min, at target, observed >= 5x forecast, util high
+    acts = p.on_tick([view(0.9, inst=4, tps=6000.0)], now=2500.0)
+    assert acts and acts[0].delta == 1 and "underestimate" in acts[0].reason
+    # overestimate: observed <= 0.5x forecast
+    acts = p.on_tick([view(0.5, inst=4, tps=300.0)], now=2600.0)
+    assert acts and acts[0].delta == -1
+    # outside the window: no escape
+    p2 = LTPolicy(mode="UA")
+    p2.set_targets({("m", "r"): 4}, {("m", "r"): 1000.0}, now=0.0)
+    assert p2.on_tick([view(0.9, inst=4, tps=6000.0)], now=100.0) == []
+
+
+def test_route_global_threshold_then_least():
+    utils = {"a": 0.9, "b": 0.5, "c": 0.1}
+    assert route_global(utils, ["a", "b", "c"], 0.7) == "b"
+    assert route_global({"a": 0.9, "b": 0.95}, ["a", "b"], 0.7) == "a"
+    assert route_global(utils, ["c"], 0.7) == "c"
+
+
+def test_jsq_and_endpoint_pick():
+    assert route_jsq({"i1": 100, "i2": 50, "i3": 50}) == "i2"
+    assert pick_endpoint({"e1": 0.4, "e2": 0.2}) == "e2"

@@ -1,0 +1,134 @@
+"""Scheduler policy properties (hypothesis)."""
+import dataclasses
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduling
+
+
+@dataclasses.dataclass
+class R:
+    arrival: float
+    tier: str
+    ttft_deadline: float
+    priority: int = 1
+
+
+def reqs_strategy():
+    tier = st.sampled_from(["IW-F", "IW-N", "NIW"])
+    # integer-valued times: sub-ULP deadline gaps would otherwise vanish
+    # in the (deadline - now) subtraction and make orderings ambiguous
+    return st.lists(
+        st.builds(R,
+                  arrival=st.integers(0, 1000).map(float),
+                  tier=tier,
+                  ttft_deadline=st.integers(0, 2000).map(float),
+                  priority=st.sampled_from([0, 1])),
+        min_size=0, max_size=30)
+
+
+NOW = 500.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs_strategy(), st.sampled_from(["fcfs", "edf", "pf", "dpa"]))
+def test_permutation_preserved(reqs, policy):
+    out = scheduling.get_policy(policy)(reqs, NOW)
+    assert sorted(map(id, out)) == sorted(map(id, reqs))
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs_strategy())
+def test_fcfs_sorted_by_arrival(reqs):
+    out = scheduling.order_fcfs(reqs, NOW)
+    fg = [r for r in out if not (r.tier == "NIW" and r.priority == 1)]
+    assert all(a.arrival <= b.arrival for a, b in zip(fg, fg[1:]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs_strategy())
+def test_edf_sorted_by_deadline(reqs):
+    out = scheduling.order_edf(reqs, NOW)
+    fg = [r for r in out if not (r.tier == "NIW" and r.priority == 1)]
+    assert all(a.ttft_deadline <= b.ttft_deadline
+               for a, b in zip(fg, fg[1:]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs_strategy())
+def test_pf_iwf_strictly_first(reqs):
+    out = scheduling.order_pf(reqs, NOW)
+    fg = [r for r in out if not (r.tier == "NIW" and r.priority == 1)]
+    seen_non_f = False
+    for r in fg:
+        if r.tier != "IW-F":
+            seen_non_f = True
+        else:
+            assert not seen_non_f
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs_strategy())
+def test_background_niw_always_last(reqs):
+    for policy in ("fcfs", "edf", "pf", "dpa"):
+        out = scheduling.get_policy(policy)(reqs, NOW)
+        bg_started = False
+        for r in out:
+            is_bg = r.tier == "NIW" and r.priority == 1
+            if is_bg:
+                bg_started = True
+            else:
+                assert not bg_started, policy
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs_strategy())
+def test_dpa_bucket_ordering(reqs):
+    tau_n, tau_p = 30.0, 5.0
+    out = scheduling.order_dpa(reqs, NOW, tau_n, tau_p)
+    fg = [r for r in out if not (r.tier == "NIW" and r.priority == 1)]
+
+    def bucket(r):
+        d = r.ttft_deadline - NOW
+        fast = r.tier == "IW-F"
+        if d < -tau_n:
+            return 1
+        if d < 0:
+            return 6
+        if d <= tau_p:
+            return 2 if fast else 3
+        return 4 if fast else 5
+
+    assert all(bucket(a) <= bucket(b) for a, b in zip(fg, fg[1:]))
+
+
+def test_dpa_severely_expired_first():
+    rs = [R(0, "IW-N", NOW + 100), R(1, "IW-F", NOW - 100),
+          R(2, "IW-F", NOW + 1)]
+    out = scheduling.order_dpa(rs, NOW)
+    assert out[0].ttft_deadline == NOW - 100   # severely expired
+    assert out[1].ttft_deadline == NOW + 1     # urgent IW-F
+
+
+@settings(max_examples=40, deadline=None)
+@given(reqs_strategy())
+def test_wsl_continuum_properties(reqs):
+    """Weighted-slack scheduler: equal weights == EDF ordering."""
+    out_eq = scheduling.order_wsl(reqs, NOW, weights={"IW-F": 1.0,
+                                                      "IW-N": 1.0,
+                                                      "NIW": 1.0})
+    fg = [r for r in out_eq if not (r.tier == "NIW" and r.priority == 1)]
+    assert all(a.ttft_deadline <= b.ttft_deadline
+               for a, b in zip(fg, fg[1:]))
+    # permutation preserved
+    out = scheduling.order_wsl(reqs, NOW)
+    assert sorted(map(id, out)) == sorted(map(id, reqs))
+
+
+def test_wsl_weights_favor_fast_tier():
+    rs = [R(0, "IW-N", NOW + 10), R(1, "IW-F", NOW + 40)]
+    # slack 10 vs 40, but IW-F weight 8 vs 2: 40/8=5 < 10/2=5 -> tie ->
+    # arrival order; bump weight to break clearly
+    out = scheduling.order_wsl(rs, NOW, weights={"IW-F": 16.0, "IW-N": 2.0,
+                                                 "NIW": 1.0})
+    assert out[0].tier == "IW-F"

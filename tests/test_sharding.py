@@ -1,0 +1,72 @@
+"""Logical-axis sharding substrate."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.dist.sharding import (P, SERVE_RULES, TRAIN_RULES, ShardingRules,
+                                 axes_of, axis_rules, box_like,
+                                 named_sharding_tree, shard, unbox)
+from repro.launch.mesh import make_local_mesh
+
+
+def test_rules_spec_drops_missing_axes():
+    mesh = make_local_mesh()  # axes (data, model), no pod
+    # pod is dropped (absent from mesh); embed's "data" is dropped too
+    # because batch already consumed it (a mesh axis may appear only once
+    # per PartitionSpec)
+    spec = TRAIN_RULES.spec(("batch", "seq", "embed"), mesh)
+    assert spec == PartitionSpec("data", None, None)
+    # param-style spec (no batch): embed gets the data (FSDP) axis
+    pspec = TRAIN_RULES.spec(("embed", "mlp"), mesh)
+    assert pspec == PartitionSpec("data", "model")
+
+
+def test_rules_no_duplicate_mesh_axes():
+    r = ShardingRules({"a": ("data", "model"), "b": "model"})
+    spec = r.spec(("a", "b"))
+    flat = []
+    for e in spec:
+        if e is None:
+            continue
+        flat += list(e) if isinstance(e, tuple) else [e]
+    assert len(flat) == len(set(flat))
+
+
+def test_box_unbox_roundtrip():
+    tree = {"w": P(jnp.ones((2, 3)), ("embed", "mlp"))}
+    vals = unbox(tree)
+    axes = axes_of(tree)
+    again = box_like(vals, axes)
+    assert isinstance(again["w"], P)
+    assert again["w"].axes == ("embed", "mlp")
+
+
+def test_shard_noop_without_context():
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "embed") is x
+
+
+def test_named_sharding_tree_and_constraint():
+    mesh = make_local_mesh()
+    tree = {"w": P(jnp.ones((4, 4)), ("embed", "mlp"))}
+    shards = named_sharding_tree(axes_of(tree), mesh, TRAIN_RULES)
+    assert shards["w"].mesh.shape == dict(
+        zip(mesh.axis_names, mesh.devices.shape))
+    with axis_rules(mesh, TRAIN_RULES):
+        y = jax.jit(lambda a: shard(a * 2, "batch", "embed"))(jnp.ones((4, 4)))
+    assert float(y.sum()) == 32.0
+
+
+def test_collective_bytes_parser():
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = """
+  %ag = f32[128,256]{1,0} all-gather(%x), replica_groups=[16,16]
+  %ar = bf16[64]{0} all-reduce(%y), to_apply=%add
+  %cp = f32[8,8]{1,0} collective-permute(%z)
+  %notacoll = f32[2,2]{1,0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 256 * 4
+    assert out["all-reduce"] == 64 * 2 * 2.0   # ring 2x factor
+    assert out["collective-permute"] == 8 * 8 * 4
+    assert "add" not in out

@@ -1,0 +1,40 @@
+"""Training loop + checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduce_for_smoke
+from repro.data.pipeline import DataConfig
+from repro.dist.sharding import unbox
+from repro.models import model
+from repro.train import checkpoint as ckpt
+from repro.train.loop import train
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+def test_loss_decreases():
+    cfg = reduce_for_smoke(get_arch("gemma-7b"))
+    out = train(cfg, steps=25, data=DataConfig(batch_size=4, seq_len=32),
+                opt=AdamW(lr=2e-3), verbose=False, log_every=5)
+    losses = [l for (_, l) in out["losses"]]
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduce_for_smoke(get_arch("starcoder2-7b"))
+    params = unbox(model.init(cfg, jax.random.PRNGKey(0)))
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, params, step=7)
+    restored, step = ckpt.restore(path, params)
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, restored)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) < 2e-4
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-6
+    assert float(lr(jnp.asarray(100))) < 2e-4
