@@ -1,28 +1,28 @@
 """Shared benchmark scaffolding: calibrated strategy runs over the
 synthetic production trace (see DESIGN.md §7 for the workload anchors).
 
-Workload subsampling: traffic is thinned by ``scale`` and the fleet's
-instance-count knobs are scaled accordingly, preserving per-instance
-dynamics (see sim/perfmodel.py).  All $-figures use the paper's
-$98.32/h H100-cluster price.
+Strategies are declarative: ``stack_spec`` maps a strategy name to a
+``StackSpec`` and every run goes through ``repro.api.build_stack`` — the
+same construction path as examples and tests.  Workload subsampling:
+traffic is thinned by ``scale`` and the fleet's instance-count knobs are
+scaled accordingly, preserving per-instance dynamics (see
+sim/perfmodel.py).  All $-figures use the paper's $98.32/h H100-cluster
+price.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
-from repro.core.chiron import ChironPolicy
-from repro.core.controller import ControllerConfig, SageServeController
-from repro.core.queue_manager import QueueManager
-from repro.core.scaling import make_policy
+from repro.api import PolicySpec, StackSpec, build_stack
 from repro.sim.metrics import Report
-from repro.sim.perfmodel import PROFILES, sustained_input_tps
-from repro.sim.simulator import SimConfig, Simulation
+from repro.sim.perfmodel import PerfProfile
 from repro.sim.workload import PAPER_MODELS, REGIONS, WorkloadSpec, generate
 
 DOLLARS_PER_HOUR = 98.32     # paper §7.2.1
 THETA_HEADROOM = 0.7         # ILP capacity derating (keeps tail latency)
+
+STRATEGIES = ("siloed", "reactive", "lt-i", "lt-u", "lt-ua", "chiron")
 
 
 @dataclasses.dataclass
@@ -45,12 +45,37 @@ def make_trace(spec: BenchSpec):
         burst_hours=spec.burst_hours))
 
 
-def make_controller(models: Sequence[str]) -> SageServeController:
-    theta = {m: THETA_HEADROOM * sustained_input_tps(PROFILES[m])
-             for m in models}
-    return SageServeController(ControllerConfig(
-        models=list(models), regions=list(REGIONS), theta=theta,
-        min_instances=2, epsilon=0.8, fit_steps=150))
+def planner_spec(fit_steps: int = 150) -> PolicySpec:
+    return PolicySpec("sageserve", {"min_instances": 2, "epsilon": 0.8,
+                                    "fit_steps": fit_steps,
+                                    "theta_headroom": THETA_HEADROOM})
+
+
+def stack_spec(spec: BenchSpec, strategy: str,
+               scheduler: Optional[str] = None) -> StackSpec:
+    """Declarative stack for one paper strategy."""
+    common = dict(models=tuple(spec.models), regions=tuple(REGIONS),
+                  scheduler=scheduler or spec.scheduler,
+                  spot_spare=spec.spot_spare)
+    if strategy == "siloed":
+        return StackSpec(scaler="reactive", queue=None, siloed=True,
+                         siloed_iw=max(spec.initial_instances - 1, 2),
+                         siloed_niw=2,
+                         initial_instances=spec.initial_instances, **common)
+    if strategy == "chiron":
+        return StackSpec(
+            scaler=PolicySpec("chiron", {
+                "theta": 0.6,
+                "init_interactive": max(spec.initial_instances - 2, 2),
+                "init_mixed": 1, "init_batch": 1}),
+            initial_instances=None,   # Chiron sizes its own pools
+            **common)
+    if strategy not in ("reactive", "lt-i", "lt-u", "lt-ua"):
+        raise KeyError(f"unknown strategy {strategy!r}; "
+                       f"known: {', '.join(STRATEGIES)}")
+    planner = None if strategy == "reactive" else planner_spec()
+    return StackSpec(scaler=strategy, planner=planner,
+                     initial_instances=spec.initial_instances, **common)
 
 
 def reset_trace(trace) -> None:
@@ -65,34 +90,13 @@ def reset_trace(trace) -> None:
 
 
 def run_strategy(trace, spec: BenchSpec, strategy: str,
-                 scheduler: Optional[str] = None) -> Report:
+                 scheduler: Optional[str] = None,
+                 profiles: Optional[Dict[str, PerfProfile]] = None
+                 ) -> Report:
     reset_trace(trace)
-    models = list(spec.models)
-    scheduler = scheduler or spec.scheduler
-    if strategy == "siloed":
-        cfg = SimConfig(policy=make_policy("reactive"),
-                        queue_manager=None, siloed=True,
-                        siloed_iw=max(spec.initial_instances - 1, 2),
-                        siloed_niw=2,
-                        initial_instances=spec.initial_instances,
-                        spot_spare=spec.spot_spare, scheduler=scheduler)
-    elif strategy == "chiron":
-        prof = {m: sustained_input_tps(PROFILES[m]) for m in models}
-        pol = ChironPolicy(theta=0.6, profile_tps=prof,
-                           init_interactive=max(spec.initial_instances
-                                                - 2, 2),
-                           init_mixed=1, init_batch=1)
-        cfg = SimConfig(policy=pol, queue_manager=QueueManager(),
-                        initial_instances=pol.initial_instances(),
-                        spot_spare=spec.spot_spare, scheduler=scheduler)
-    else:
-        ctl = None if strategy == "reactive" else make_controller(models)
-        cfg = SimConfig(policy=make_policy(strategy), controller=ctl,
-                        queue_manager=QueueManager(),
-                        initial_instances=spec.initial_instances,
-                        spot_spare=spec.spot_spare, scheduler=scheduler)
-    sim = Simulation(trace, cfg, models=models, name=strategy)
-    return sim.run()
+    stack = build_stack(stack_spec(spec, strategy, scheduler),
+                        profiles=profiles)
+    return stack.simulate(trace, name=strategy)
 
 
 def csv_line(name: str, value, derived="") -> str:

@@ -1,20 +1,64 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,value,derived`` CSV.  ``--quick`` shrinks traces for CI.
+Prints ``name,value,derived`` CSV.  ``--quick`` shrinks traces for CI;
+``--smoke`` runs a <60 s strategy sweep over a tiny trace through the
+declarative API — enough to catch control-plane regressions without the
+full workloads (wired into scripts/check.sh).
 """
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
+
+
+def smoke() -> int:
+    """Tiny end-to-end sweep: every strategy through build_stack."""
+    from benchmarks.common import (BenchSpec, STRATEGIES, csv_line,
+                                   make_trace, run_strategy)
+    spec = BenchSpec(days=0.1, scale=0.02, initial_instances=3,
+                     spot_spare=8)
+    trace = make_trace(spec)
+    print("name,value,derived", flush=True)
+    csv_line("smoke.requests", len(trace), "trace size")
+    hours = {}
+    for strat in STRATEGIES:
+        t0 = time.time()
+        rep = run_strategy(trace, spec, strat)
+        done = sum(1 for r in trace if not math.isnan(r.e2e))
+        frac = done / max(len(trace), 1)
+        hours[strat] = rep.total_instance_hours()
+        csv_line(f"smoke.completion.{strat}", round(frac, 4), "fraction")
+        csv_line(f"smoke.instance_hours.{strat}",
+                 round(hours[strat], 1),
+                 f"{time.time() - t0:.1f}s wall")
+        if frac < 0.9:
+            print(f"FAILED smoke: {strat} completed only {frac:.1%}",
+                  file=sys.stderr)
+            return 1
+        if rep.retry_dropped > 0.01 * len(trace):
+            print(f"FAILED smoke: {strat} dropped {rep.retry_dropped} "
+                  f"requests on retry", file=sys.stderr)
+            return 1
+    if hours["reactive"] > hours["siloed"] * 1.05:
+        print("FAILED smoke: unified reactive used more instance-hours "
+              "than siloed", file=sys.stderr)
+        return 1
+    print("# smoke ok", flush=True)
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny <60s strategy sweep for CI")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
 
     from benchmarks import (fig8_unified_vs_siloed, fig11_instance_hours,
                             fig14_scalability_moe, fig15_schedulers,

@@ -4,11 +4,15 @@ LT-UA / Chiron — reproduces the shape of Fig. 8 + Fig. 11 of the paper.
     PYTHONPATH=src python examples/autoscale_simulation.py [--scale 0.15]
 """
 import argparse
+import os
 import sys
 
-sys.path.insert(0, "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)   # for benchmarks.common
 
-from benchmarks.common import BenchSpec, make_trace, run_strategy
+from benchmarks.common import (STRATEGIES, BenchSpec, make_trace,
+                               run_strategy)
 
 
 def main():
@@ -21,12 +25,7 @@ def main():
     trace = make_trace(spec)
     print(f"{len(trace)} requests, {args.days} day(s), scale {args.scale}\n")
     reports = {}
-    import math
-    for strat in ("siloed", "reactive", "lt-i", "lt-u", "lt-ua", "chiron"):
-        for r in trace:
-            r.ttft = math.nan
-            r.e2e = math.nan
-            r.priority = 1
+    for strat in STRATEGIES:
         reports[strat] = run_strategy(trace, spec, strat)
         print(reports[strat].summary())
         print()

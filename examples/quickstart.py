@@ -1,7 +1,9 @@
-"""Quickstart: the SageServe control loop in 60 lines.
+"""Quickstart: the SageServe control loop via the declarative API.
 
-Generates a small synthetic trace, runs the forecast -> ILP -> LT-UA
-pipeline against the Unified Reactive baseline, and prints the savings.
+Describes two serving stacks as ``StackSpec``s — the Unified Reactive
+baseline and the forecast+ILP LT-UA pipeline — builds each with
+``build_stack`` (the one construction path for examples, benchmarks and
+tests), runs them over a small synthetic trace, and prints the savings.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,11 +11,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core.controller import ControllerConfig, SageServeController
-from repro.core.queue_manager import QueueManager
-from repro.core.scaling import make_policy
-from repro.sim.perfmodel import PROFILES, sustained_input_tps
-from repro.sim.simulator import SimConfig, Simulation
+from repro.api import PolicySpec, StackSpec, build_stack
 from repro.sim.workload import PAPER_MODELS, REGIONS, WorkloadSpec, generate
 
 
@@ -21,17 +19,20 @@ def main():
     trace = generate(WorkloadSpec(days=1.0, scale=0.1, seed=0))
     print(f"trace: {len(trace)} requests over 1 day, 4 models, 3 regions")
 
-    theta = {m: 0.7 * sustained_input_tps(PROFILES[m]) for m in PAPER_MODELS}
+    specs = {
+        "reactive": StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                              scaler="reactive",
+                              initial_instances=4, spot_spare=16),
+        "lt-ua": StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                           scaler="lt-ua",
+                           planner=PolicySpec("sageserve",
+                                              {"min_instances": 2,
+                                               "fit_steps": 120}),
+                           initial_instances=4, spot_spare=16),
+    }
     reports = {}
-    for name in ("reactive", "lt-ua"):
-        ctl = None if name == "reactive" else SageServeController(
-            ControllerConfig(models=list(PAPER_MODELS),
-                             regions=list(REGIONS), theta=theta,
-                             min_instances=2, fit_steps=120))
-        cfg = SimConfig(policy=make_policy(name), controller=ctl,
-                        queue_manager=QueueManager(),
-                        initial_instances=4, spot_spare=16)
-        reports[name] = Simulation(trace, cfg, name=name).run()
+    for name, spec in specs.items():
+        reports[name] = build_stack(spec).simulate(trace, name=name)
         print(reports[name].summary())
 
     base, ours = reports["reactive"], reports["lt-ua"]

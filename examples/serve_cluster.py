@@ -16,8 +16,8 @@ sys.path.insert(0, "src")
 import numpy as np
 import jax
 
+from repro.api import PolicySpec, resolve
 from repro.configs import get_arch, reduce_for_smoke
-from repro.core.queue_manager import QueueManager
 from repro.dist.sharding import unbox
 from repro.models import model
 from repro.serving.engine import ServeRequest, ServingEngine
@@ -26,9 +26,12 @@ from repro.serving.engine import ServeRequest, ServingEngine
 def main():
     cfg = reduce_for_smoke(get_arch("starcoder2-7b"))
     params = unbox(model.init(cfg, jax.random.PRNGKey(0)))
+    # scheduler and queue manager come from the same registry the
+    # simulator uses — the real-JAX path shares the control-plane API
     eng = ServingEngine(cfg, params, max_batch=4, max_seq=128,
                         scheduler="dpa")
-    qm = QueueManager(one_thresh=0.99, two_thresh=0.6)
+    qm = resolve("queue", PolicySpec("niw", {"one_thresh": 0.99,
+                                             "two_thresh": 0.6}))
     rng = np.random.default_rng(0)
 
     # 9 interactive + 6 NIW requests
@@ -40,14 +43,13 @@ def main():
             max_new_tokens=12, tier=tier, arrival=float(i),
             ttft_deadline=i + (3.0 if tier == "IW-F" else 30.0))
         iw.append(r)
+    # ServeRequest satisfies the shared RequestLike shape, so the NIW
+    # queue manager handles engine requests exactly like simulator ones
     for i in range(9, 15):
         r = ServeRequest(rid=i, prompt=rng.integers(
             0, cfg.vocab_size, 16).astype(np.int32),
-            max_new_tokens=12, tier="NIW", arrival=float(i),
-            ttft_deadline=i + 24 * 3600.0)
-        r.model = "starcoder2-7b"
-        r.prompt_tokens = len(r.prompt)
-        r.output_tokens = r.max_new_tokens
+            max_new_tokens=12, model="starcoder2-7b", tier="NIW",
+            arrival=float(i), ttft_deadline=i + 24 * 3600.0)
         niw.append(r)
         qm.submit(r)
 

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Regression gate: tier-1 tests + the <60s smoke benchmark.
+#
+#   ./scripts/check.sh            # full tier-1 suite + smoke sweep
+#   ./scripts/check.sh --fast     # -x (stop at first failure) + smoke
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-q)
+if [[ "${1:-}" == "--fast" ]]; then
+  PYTEST_ARGS+=(-x)
+fi
+
+echo "== tier-1 tests =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "== smoke benchmark (tiny trace, all strategies via build_stack) =="
+python -m benchmarks.run --smoke
+
+echo "== check.sh OK =="

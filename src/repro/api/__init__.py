@@ -1,0 +1,30 @@
+"""Unified control-plane API: protocols, registry, declarative specs.
+
+The import surface is layered to stay cycle-free: ``registry``,
+``protocols``, ``signals`` and ``spec`` load eagerly (core modules
+import them to register components); the stack builder — which imports
+the simulator and the core built-ins — loads lazily on first access of
+``build_stack`` / ``ServingStack`` / ``simulate``.
+"""
+from repro.api.protocols import (Forecaster, GlobalPlanner, QueuePolicy,
+                                 RequestLike, Router, Scaler, Scheduler)
+from repro.api.registry import known, register, resolve
+from repro.api.signals import BacklogSignal, Signal, UtilizationSignal
+from repro.api.spec import PolicySpec, StackSpec
+
+_LAZY = ("BuildContext", "ServingStack", "build_stack", "simulate")
+
+__all__ = [
+    "BacklogSignal", "BuildContext", "Forecaster", "GlobalPlanner",
+    "PolicySpec", "QueuePolicy", "RequestLike", "Router", "Scaler",
+    "Scheduler", "ServingStack", "Signal", "StackSpec",
+    "UtilizationSignal", "build_stack", "known", "register", "resolve",
+    "simulate",
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.api import stack
+        return getattr(stack, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

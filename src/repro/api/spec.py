@@ -1,0 +1,157 @@
+"""Declarative serving-stack specification.
+
+A ``StackSpec`` is a plain-data description of one SageServe deployment:
+which models run in which regions, which pluggable policies fill each
+control-plane slot (scaler / scheduler / router / queue / planner, each
+a ``PolicySpec`` of registry name + kwargs), the pool layout (unified vs
+siloed), SLO tiers, and the simulator knobs.  It round-trips through
+``to_dict``/``from_dict`` (JSON-able), validates against the registry,
+and builds into a runnable ``ServingStack`` via
+``repro.api.build_stack`` — the single construction path used by
+examples, benchmarks and tests.  Scenario sweeps are a loop over dicts::
+
+    for d in grid:
+        report = build_stack(StackSpec.from_dict(d)).simulate(trace)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+from repro.api import registry
+from repro.sim.types import TTFT_SLA
+
+SpecLike = Union[None, str, "PolicySpec", Mapping, Tuple[str, Mapping]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Registry name + constructor kwargs for one pluggable component."""
+
+    name: str
+    kwargs: Dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def coerce(cls, v: SpecLike) -> Optional["PolicySpec"]:
+        if v is None or isinstance(v, cls):
+            return v
+        if isinstance(v, str):
+            return cls(v)
+        if isinstance(v, Mapping):
+            return cls(v["name"], dict(v.get("kwargs", {})))
+        if isinstance(v, tuple) and len(v) == 2:
+            return cls(v[0], dict(v[1]))
+        raise TypeError(f"cannot interpret {v!r} as a PolicySpec")
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "kwargs": dict(self.kwargs)}
+
+
+_POLICY_SLOTS = ("scaler", "scheduler", "router", "queue", "planner")
+
+
+@dataclasses.dataclass
+class StackSpec:
+    """Everything needed to assemble one serving stack."""
+
+    models: Tuple[str, ...]
+    regions: Tuple[str, ...]
+
+    # pluggable policy slots (default_factory: PolicySpec.kwargs is a
+    # mutable dict, a shared default instance would leak edits across
+    # every StackSpec)
+    scaler: PolicySpec = dataclasses.field(
+        default_factory=lambda: PolicySpec("reactive"))
+    scheduler: PolicySpec = dataclasses.field(
+        default_factory=lambda: PolicySpec("fcfs"))
+    router: PolicySpec = dataclasses.field(
+        default_factory=lambda: PolicySpec("threshold"))
+    queue: Optional[PolicySpec] = dataclasses.field(
+        default_factory=lambda: PolicySpec("niw"))
+    planner: Optional[PolicySpec] = None
+
+    # pool layout -----------------------------------------------------------
+    siloed: bool = False                  # separate IW/NIW pools
+    initial_instances: Optional[int] = None  # per (model, region); None →
+    #                                          scaler's own initial sizing
+    siloed_iw: int = 16
+    siloed_niw: int = 4
+    spot_spare: int = 10
+
+    # SLO tiers (TTFT seconds per tier; NIW has a batch deadline instead)
+    slo_ttft: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(TTFT_SLA))
+
+    # control-loop cadence & thresholds -------------------------------------
+    tick: float = 15.0
+    sample_every: float = 60.0
+    qm_signal_thresh: float = 0.6
+    tps_window: float = 60.0
+    drain_grace: float = 6 * 3600.0
+
+    # retry/backoff when an endpoint has zero live instances
+    retry_base: float = 5.0
+    retry_cap: float = 160.0
+    max_retries: int = 12
+
+    def __post_init__(self):
+        self.models = tuple(self.models)
+        self.regions = tuple(self.regions)
+        for slot in _POLICY_SLOTS:
+            setattr(self, slot, PolicySpec.coerce(getattr(self, slot)))
+
+    # -------------------------------------------------------------- validate
+    def validate(self) -> "StackSpec":
+        if not self.models:
+            raise ValueError("StackSpec.models must be non-empty")
+        if not self.regions:
+            raise ValueError("StackSpec.regions must be non-empty")
+        for slot in _POLICY_SLOTS:
+            spec = getattr(self, slot)
+            if spec is None:
+                if slot in ("scaler", "scheduler", "router"):
+                    raise ValueError(f"StackSpec.{slot} is required")
+                continue
+            if spec.name.lower() not in registry.known(slot):
+                raise KeyError(
+                    f"StackSpec.{slot}: no {slot} registered under "
+                    f"{spec.name!r}; known: "
+                    f"{', '.join(registry.known(slot))}")
+        if self.siloed and (self.siloed_iw <= 0 or self.siloed_niw <= 0):
+            raise ValueError("siloed pools need positive instance counts")
+        if (self.initial_instances is not None
+                and self.initial_instances <= 0):
+            raise ValueError("initial_instances must be positive")
+        for knob in ("tick", "sample_every", "tps_window", "retry_base"):
+            if getattr(self, knob) <= 0:
+                raise ValueError(f"StackSpec.{knob} must be positive")
+        if not 0.0 < self.qm_signal_thresh <= 1.0:
+            raise ValueError("qm_signal_thresh must be in (0, 1]")
+        for tier, sla in self.slo_ttft.items():
+            if sla <= 0:
+                raise ValueError(f"slo_ttft[{tier!r}] must be positive")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        return self
+
+    # ------------------------------------------------------------- dict I/O
+    def to_dict(self) -> Dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, PolicySpec):
+                v = v.to_dict()
+            elif isinstance(v, tuple):
+                v = list(v)
+            elif isinstance(v, dict):
+                v = dict(v)
+            out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "StackSpec":
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise KeyError(f"unknown StackSpec fields: {sorted(unknown)}")
+        return cls(**{k: v for k, v in d.items()})

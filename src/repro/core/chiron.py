@@ -18,6 +18,8 @@ import dataclasses
 import math
 from typing import Dict, List, Tuple
 
+from repro.api.registry import register
+from repro.api.signals import BacklogSignal, Signal
 from repro.core.scaling import EndpointView, ScaleAction, ScalingPolicy
 
 Key = Tuple[str, str]
@@ -44,6 +46,10 @@ class ChironPolicy(ScalingPolicy):
     def note_backlog(self, model: str, region: str, tokens: float) -> None:
         self.batch_backlog[(model, region)] = tokens
 
+    def observe(self, signal: Signal) -> None:
+        if isinstance(signal, BacklogSignal):
+            self.note_backlog(signal.model, signal.region, signal.tokens)
+
     def on_tick(self, views: List[EndpointView], now: float
                 ) -> List[ScaleAction]:
         acts: List[ScaleAction] = []
@@ -66,3 +72,12 @@ class ChironPolicy(ScalingPolicy):
                                         "chiron target"))
                 self._last[key] = now
         return acts
+
+
+@register("scaler", "chiron")
+def _make_chiron(ctx, **kwargs) -> ChironPolicy:
+    if kwargs.get("profile_tps") is None and ctx is not None:
+        from repro.sim.perfmodel import sustained_input_tps
+        kwargs["profile_tps"] = {m: sustained_input_tps(p)
+                                 for m, p in ctx.profiles.items()}
+    return ChironPolicy(**kwargs)

@@ -13,6 +13,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api.registry import register
 from repro.core.forecast import ARIMAForecaster
 from repro.core.provisioner import ProvisionProblem, ProvisionSolution, solve
 
@@ -114,3 +115,22 @@ class SageServeController:
                                              + sol.delta[i, j, 0]))
                 forecasts[(m, rg)] = rho[i, j]
         return targets, forecasts
+
+
+@register("planner", "sageserve")
+def _make_sageserve_planner(ctx, theta=None, theta_headroom: float = 0.7,
+                            **kwargs) -> SageServeController:
+    """GlobalPlanner factory: per-model θ (sustained input TPS per
+    instance, derated by ``theta_headroom`` to protect tail latency)
+    defaults from the build context's perf profiles."""
+    if theta is None:
+        if ctx is None:
+            raise ValueError("planner 'sageserve' needs either explicit "
+                             "theta or a build context with profiles")
+        from repro.sim.perfmodel import sustained_input_tps
+        theta = {m: theta_headroom * sustained_input_tps(p)
+                 for m, p in ctx.profiles.items()}
+    return SageServeController(ControllerConfig(
+        models=list(ctx.models) if ctx else list(theta),
+        regions=list(ctx.regions) if ctx else [],
+        theta=theta, **kwargs))

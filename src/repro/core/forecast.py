@@ -166,3 +166,11 @@ def select_order(series, grid=((1, 1, 1), (2, 1, 1), (2, 1, 2), (3, 1, 1)),
         if a < best_aic:
             best, best_aic = f, a
     return best
+
+
+from repro.api.registry import register
+
+
+@register("forecaster", "arima")
+def _make_arima(ctx, **kwargs) -> ARIMAForecaster:
+    return ARIMAForecaster(**kwargs)

@@ -18,6 +18,8 @@ import collections
 import dataclasses
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.api.registry import register
+
 Key = Tuple[str, str]  # (model, region)
 
 
@@ -89,3 +91,8 @@ class QueueManager:
                 out.append(r)
         self.released += len(out)
         return out
+
+
+@register("queue", "niw")
+def _make_queue_manager(ctx, **kwargs) -> QueueManager:
+    return QueueManager(**kwargs)

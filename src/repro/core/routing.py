@@ -7,16 +7,28 @@ instance routing: Join-the-Shortest-Queue on remaining tokens.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Mapping, Sequence
+
+from repro.api.registry import register
 
 
 def route_global(region_utils: Dict[str, float],
                  preference: Sequence[str],
                  threshold: float = 0.7) -> str:
-    """region_utils: effective mem util per candidate region."""
+    """region_utils: effective mem util per candidate region.
+
+    Preferred regions absent from ``region_utils`` (no endpoint deployed
+    there) are skipped.  When no utilization data exists at all, the
+    home region — the first preference — is the documented fallback.
+    """
     for r in preference:
         if r in region_utils and region_utils[r] < threshold:
             return r
+    if not region_utils:
+        if not preference:
+            raise ValueError("route_global: no candidate regions and no "
+                             "preference to fall back to")
+        return preference[0]
     return min(region_utils, key=region_utils.get)
 
 
@@ -28,3 +40,19 @@ def route_jsq(instance_loads: Dict[str, float]) -> str:
 def pick_endpoint(endpoint_utils: Dict[str, float]) -> str:
     """Least effective-memory-utilized deployment endpoint in a region."""
     return min(endpoint_utils, key=lambda k: (endpoint_utils[k], k))
+
+
+class ThresholdRouter:
+    """``Router``-protocol wrapper around ``route_global``."""
+
+    def __init__(self, threshold: float = 0.7):
+        self.threshold = threshold
+
+    def route(self, region_utils: Mapping[str, float],
+              preference: Sequence[str]) -> str:
+        return route_global(dict(region_utils), preference, self.threshold)
+
+
+@register("router", "threshold")
+def _make_threshold_router(ctx, **kwargs) -> ThresholdRouter:
+    return ThresholdRouter(**kwargs)

@@ -15,6 +15,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.api.registry import register
+from repro.api.signals import Signal
+
 Key = Tuple[str, str]  # (model, region)
 
 
@@ -51,6 +54,10 @@ class ScalingPolicy:
     def set_targets(self, targets: Dict[Key, int],
                     forecasts: Dict[Key, float], now: float) -> List[ScaleAction]:
         return []
+
+    def observe(self, signal: Signal) -> None:
+        """Consume a control-plane signal (backlog, utilization, ...).
+        Policies that don't care inherit this no-op."""
 
 
 class ReactivePolicy(ScalingPolicy):
@@ -172,3 +179,8 @@ def make_policy(name: str, **kw) -> ScalingPolicy:
     if name == "lt-ua":
         return LTPolicy(mode="UA", **kw)
     raise KeyError(name)
+
+
+for _name in ("reactive", "siloed", "lt-i", "lt-u", "lt-ua"):
+    register("scaler", _name)(
+        lambda ctx, _n=_name, **kw: make_policy(_n, **kw))

@@ -11,7 +11,10 @@ non-preemptible once batched, §2.3).  Requests expose:
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, List, Sequence
+
+from repro.api.registry import register
 
 # NIW requests still at priority 1 always sort behind every priority-0 /
 # interactive request (paper: "selected only if there are no priority-0
@@ -72,8 +75,8 @@ POLICIES: Dict[str, Callable] = {
 
 def get_policy(name: str, **kw) -> Callable:
     fn = POLICIES[name]
-    if name == "dpa" and kw:
-        return lambda reqs, now: order_dpa(reqs, now, **kw)
+    if kw:
+        return functools.partial(fn, **kw)
     return fn
 
 
@@ -100,3 +103,12 @@ def order_wsl(reqs: Sequence, now: float,
 
 
 POLICIES["wsl"] = order_wsl
+
+
+# Every ordering function doubles as a registry-resolvable Scheduler:
+# resolve("scheduler", "dpa") or resolve("scheduler",
+# PolicySpec("dpa", {"tau_p": 10.0})) — extra kwargs are bound with
+# functools.partial, keeping the (requests, now) call shape.
+for _name in POLICIES:
+    register("scheduler", _name)(
+        lambda ctx, _n=_name, **kw: get_policy(_n, **kw))

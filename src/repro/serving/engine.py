@@ -2,39 +2,60 @@
 
 The CPU-runnable counterpart of the simulator's instance model: fixed
 decode slots over a preallocated KV cache, policy-ordered admission
-(FCFS/EDF/PF/DPA from ``repro.core.scheduling``), prefill-then-decode.
-At smoke scale this runs actual forward passes; on TPU the same engine
-drives the sharded model (see launch/serve.py).
+through the shared ``Scheduler`` protocol (any registered scheduler —
+FCFS/EDF/PF/DPA/WSL — or a custom ordering callable), prefill-then-
+decode.  ``ServeRequest`` satisfies the same ``RequestLike`` shape as
+the simulator's ``Request``, so schedulers and the NIW queue manager
+run unchanged against either path.  At smoke scale this runs actual
+forward passes; on TPU the same engine drives the sharded model (see
+launch/serve.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import resolve
 from repro.configs.base import ModelConfig
-from repro.core import scheduling
 from repro.models import model as model_mod
 
 
 @dataclasses.dataclass
 class ServeRequest:
+    """RequestLike over a real token prompt: prompt/output token counts
+    derive from the prompt array and decode budget unless set."""
+
     rid: int
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int
+    model: str = ""
+    region: str = "local"
     tier: str = "IW-N"
     arrival: float = 0.0
     ttft_deadline: float = math.inf
     priority: int = 1
+    prompt_tokens: int = 0           # 0 → len(prompt)
+    output_tokens: int = 0           # 0 → max_new_tokens
     # outputs
     tokens: List[int] = dataclasses.field(default_factory=list)
     ttft_step: Optional[int] = None
     done_step: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.prompt_tokens:
+            self.prompt_tokens = len(self.prompt)
+        if not self.output_tokens:
+            self.output_tokens = self.max_new_tokens
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_tokens + self.output_tokens
 
     @property
     def deadline(self):
@@ -50,13 +71,14 @@ class _Slot:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_seq: int = 512, scheduler: str = "fcfs",
+                 max_seq: int = 512,
+                 scheduler: Union[str, Callable] = "fcfs",
                  greedy: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.order_fn = scheduling.get_policy(scheduler)
+        self.order_fn = resolve("scheduler", scheduler)
         self.greedy = greedy
         self.queue: List[ServeRequest] = []
         self.slots = [_Slot() for _ in range(max_batch)]

@@ -1,0 +1,75 @@
+"""Typed simulator events + hook bus.
+
+The event core knows nothing about policies: it pops ``(time, seq,
+event)`` off a heap and publishes each event on the bus.  Cluster
+mechanics (arrivals, prefill/decode completion, provisioning) and
+policy adapters (tick → ``Scaler.on_tick``, hour → ``GlobalPlanner``)
+are just subscribers, so new control-plane behaviour hooks in without
+editing the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Type
+
+
+@dataclasses.dataclass(eq=False)
+class Event:
+    """Base simulator event (heap ordering is by time, never by event)."""
+
+
+@dataclasses.dataclass(eq=False)
+class Arrival(Event):
+    request: object
+
+
+@dataclasses.dataclass(eq=False)
+class Retry(Event):
+    request: object
+    attempt: int = 1
+
+
+@dataclasses.dataclass(eq=False)
+class PrefillDone(Event):
+    instance: object
+
+
+@dataclasses.dataclass(eq=False)
+class DecodeDone(Event):
+    instance: object
+    request: object
+
+
+@dataclasses.dataclass(eq=False)
+class InstanceReady(Event):
+    pending: object
+
+
+@dataclasses.dataclass(eq=False)
+class Tick(Event):
+    """Periodic control-plane tick (scaling, QM signals, sampling)."""
+
+
+@dataclasses.dataclass(eq=False)
+class Hour(Event):
+    """Hourly planning boundary (forecast + ILP)."""
+
+
+# Control events keep firing while work is in flight but must not extend
+# the simulation past its horizon on their own.
+CONTROL_EVENTS = (Tick, Hour)
+
+
+class HookBus:
+    """Exact-type event dispatch: handlers subscribe per event class and
+    run in subscription order."""
+
+    def __init__(self):
+        self._handlers: Dict[Type[Event], List[Callable]] = {}
+
+    def subscribe(self, etype: Type[Event], handler: Callable) -> None:
+        self._handlers.setdefault(etype, []).append(handler)
+
+    def publish(self, event: Event) -> None:
+        for handler in self._handlers.get(type(event), ()):
+            handler(event)

@@ -32,6 +32,8 @@ class Report:
     scale_out_events: int
     scale_in_events: int
     util_trace: Dict[Key, List[Tuple[float, float, int]]]  # t, util, count
+    retry_dropped: int = 0       # dropped after exhausting routing retries
+    parked: int = 0              # still parked in the queue manager at end
 
     # ------------------------------------------------------------ summaries
     def total_instance_hours(self) -> float:
@@ -59,12 +61,17 @@ class Report:
             f"wasted={self.total_wasted_hours():.1f} "
             f"spot-donated={self.total_spot_hours():.1f} "
             f"scale-out={self.scale_out_events} in={self.scale_in_events}")
+        if self.retry_dropped or self.parked:
+            lines.append(f"  retry-dropped={self.retry_dropped} "
+                         f"parked={self.parked}")
         return "\n".join(lines)
 
 
 def build_report(name: str, requests: Sequence[Request], cluster,
-                 util_trace: Dict[Key, List[Tuple[float, float, int]]]
-                 ) -> Report:
+                 util_trace: Dict[Key, List[Tuple[float, float, int]]],
+                 retry_dropped: int = 0, parked: int = 0,
+                 slo_ttft: Optional[Dict[str, float]] = None) -> Report:
+    slo = TTFT_SLA if slo_ttft is None else slo_ttft
     ttft, e2e, viol, comp, drop = {}, {}, {}, {}, {}
     for tier in (TIER_IWF, TIER_IWN, TIER_NIW):
         rs = [r for r in requests if r.tier == tier]
@@ -81,9 +88,9 @@ def build_report(name: str, requests: Sequence[Request], cluster,
         e2e[tier] = {"p50": _pct(ee, 50), "p75": _pct(ee, 75),
                      "p95": _pct(ee, 95),
                      "mean": float(np.mean(ee)) if ee else math.nan}
-        if tier in TTFT_SLA:
+        if tier in slo:
             bad = sum(1 for r in rs
-                      if math.isnan(r.ttft) or r.ttft > TTFT_SLA[tier])
+                      if math.isnan(r.ttft) or r.ttft > slo[tier])
             viol[tier] = bad / len(rs)
         else:
             bad = sum(1 for r in rs if not r.deadline_ok())
@@ -96,4 +103,5 @@ def build_report(name: str, requests: Sequence[Request], cluster,
         spot_hours=cluster.spot_hours(),
         scale_out_events=cluster.scale_out_events,
         scale_in_events=cluster.scale_in_events,
-        util_trace=util_trace)
+        util_trace=util_trace,
+        retry_dropped=retry_dropped, parked=parked)

@@ -2,6 +2,15 @@
 extending the SplitWise instance model to regions, endpoints, routing,
 the NIW queue manager, reactive/predictive scaling and the hourly
 forecast+ILP controller.
+
+The core is an event-hook loop: typed events (``Arrival``,
+``PrefillDone``, ``Tick``, ``Hour``, ...) are popped off a heap and
+published on a ``HookBus``; cluster mechanics and policy adapters are
+subscribers.  Policies are protocol-typed (``repro.api.protocols``) and
+see the cluster only through ``EndpointView``s and ``Signal``s — the
+simulator never special-cases a concrete policy class.  Stacks are
+normally assembled declaratively via ``repro.api.build_stack``;
+``SimConfig`` remains the low-level wiring record it produces.
 """
 from __future__ import annotations
 
@@ -10,17 +19,17 @@ import heapq
 import itertools
 import math
 from collections import defaultdict
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import scheduling
-from repro.core.chiron import ChironPolicy
-from repro.core.controller import SageServeController
-from repro.core.queue_manager import QueueManager
-from repro.core.routing import route_global
-from repro.core.scaling import EndpointView, ScaleAction, ScalingPolicy
+from repro.api.registry import resolve
+from repro.api.signals import BacklogSignal
+from repro.core.scaling import EndpointView, ScaleAction
 from repro.sim.cluster import Cluster, PendingInstance
+from repro.sim.events import (CONTROL_EVENTS, Arrival, DecodeDone, Event,
+                              HookBus, Hour, InstanceReady, PrefillDone,
+                              Retry, Tick)
 from repro.sim.instance import Instance
 from repro.sim.metrics import Report, build_report
 from repro.sim.perfmodel import PROFILES, PerfProfile
@@ -31,10 +40,11 @@ Key = Tuple[str, str]
 
 @dataclasses.dataclass
 class SimConfig:
-    policy: ScalingPolicy
-    scheduler: str = "fcfs"
-    controller: Optional[SageServeController] = None
-    queue_manager: Optional[QueueManager] = None
+    policy: object                        # Scaler protocol
+    scheduler: Union[str, Callable] = "fcfs"   # Scheduler name or callable
+    controller: Optional[object] = None   # GlobalPlanner protocol
+    queue_manager: Optional[object] = None  # QueuePolicy protocol
+    router: Optional[object] = None       # Router protocol; None → threshold
     siloed: bool = False                  # separate IW/NIW pools
     initial_instances: int = 20           # per (model, region) total
     siloed_iw: int = 16
@@ -46,6 +56,16 @@ class SimConfig:
     qm_signal_thresh: float = 0.6
     tps_window: float = 60.0
     drain_grace: float = 6 * 3600.0       # sim horizon past last arrival
+    # retry/backoff when an endpoint has zero live instances: attempt k
+    # waits min(retry_base * 2**(k-1), retry_cap); past max_retries the
+    # request is dropped and surfaced in the Report.
+    retry_base: float = 5.0
+    retry_cap: float = 160.0
+    max_retries: int = 12
+    # TTFT SLO per tier for violation accounting; None → paper defaults
+    # (repro.sim.types.TTFT_SLA).  Request deadlines themselves are a
+    # workload property, set at trace generation.
+    slo_ttft: Optional[Dict[str, float]] = None
 
 
 class Simulation:
@@ -60,7 +80,10 @@ class Simulation:
         self.models = models or sorted({r.model for r in requests})
         self.regions = regions or sorted({r.region for r in requests})
         self.profiles = profiles or {m: PROFILES[m] for m in self.models}
-        order_fn = scheduling.get_policy(cfg.scheduler)
+        order_fn = resolve("scheduler", cfg.scheduler)
+        self.router = cfg.router if cfg.router is not None else resolve(
+            "router", {"name": "threshold",
+                       "kwargs": {"threshold": cfg.route_threshold}})
 
         pools = ("IW", "NIW") if cfg.siloed else ("unified",)
         per_pool = ({"IW": cfg.siloed_iw, "NIW": cfg.siloed_niw}
@@ -87,10 +110,20 @@ class Simulation:
         self.util_trace: Dict[Key, List[Tuple[float, float, int]]] = \
             defaultdict(list)
         self._next_sample = 0.0
+        self.retry_dropped = 0
+
+        self.bus = HookBus()
+        self.bus.subscribe(Arrival, self._on_arrival)
+        self.bus.subscribe(Retry, self._on_retry)
+        self.bus.subscribe(PrefillDone, self._on_prefill_done)
+        self.bus.subscribe(DecodeDone, self._on_decode_done)
+        self.bus.subscribe(InstanceReady, self._on_instance_ready)
+        self.bus.subscribe(Tick, self._on_tick)
+        self.bus.subscribe(Hour, self._on_hour)
 
     # --------------------------------------------------------------- helpers
-    def _push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+    def _push(self, t: float, event: Event):
+        heapq.heappush(self._heap, (t, next(self._seq), event))
 
     def _pool_for(self, req: Request) -> str:
         if not self.cfg.siloed:
@@ -133,7 +166,9 @@ class Simulation:
                 for key, b in self._niw_tps_buckets.items()}
 
     # --------------------------------------------------------------- routing
-    def _route_and_enqueue(self, req: Request, forced_region: str = None):
+    def _route_and_enqueue(self, req: Request, forced_region: str = None,
+                           attempt: int = 0):
+        cfg = self.cfg
         pool = self._pool_for(req)
         if forced_region is not None:
             region = forced_region
@@ -142,19 +177,27 @@ class Simulation:
                      for r in self.regions}
             pref = [req.region] + [r for r in self.regions
                                    if r != req.region]
-            region = route_global(utils, pref, self.cfg.route_threshold)
+            region = self.router.route(utils, pref)
         ep = self.cluster.endpoint(req.model, region, pool)
         inst = ep.pick_jsq()
         if inst is None:
-            self._push(self.now + 5.0, "retry", req)
+            # endpoint has zero live instances: exponential backoff, then
+            # drop (surfaced in Report.retry_dropped) instead of requeueing
+            # forever
+            if attempt >= cfg.max_retries:
+                req.instance = "DROPPED-RETRY"
+                self.retry_dropped += 1
+                return
+            delay = min(cfg.retry_base * (2.0 ** attempt), cfg.retry_cap)
+            self._push(self.now + delay, Retry(req, attempt + 1))
             return
         ev = inst.enqueue(req, self.now)
         if ev:
-            self._push(ev[1], "prefill_done", inst)
+            self._push(ev[1], PrefillDone(inst))
         # reactive per-request trigger
         view = EndpointView(req.model, region, ep.util, ep.live_count(),
                             len(ep.pending), 0.0, pool)
-        for act in self.cfg.policy.on_request(view, self.now):
+        for act in cfg.policy.on_request(view, self.now):
             self._apply_actions([act])
 
     def _apply_actions(self, acts: List[ScaleAction]):
@@ -162,89 +205,101 @@ class Simulation:
             if self.cfg.siloed and act.pool == "unified":
                 act = dataclasses.replace(act, pool="IW")
             for kind, t, payload in self.cluster.apply_action(act, self.now):
-                self._push(t, kind, payload)
+                assert kind == "instance_ready"
+                self._push(t, InstanceReady(payload))
+
+    def _reset_outcomes(self):
+        """Traces are reused across runs (sweeps over StackSpec grids);
+        a request unserved in *this* run must not inherit a previous
+        run's outcome or queue-manager promotion."""
+        for r in self.requests:
+            r.ttft = math.nan
+            r.e2e = math.nan
+            r.admitted = math.nan
+            r.instance = None
+            r.served_region = None
+            if r.tier == TIER_NIW:
+                r.priority = 1
 
     # ------------------------------------------------------------------ run
     def run(self) -> Report:
         cfg = self.cfg
+        self._reset_outcomes()
         for req in self.requests:
-            self._push(req.arrival, "arrival", req)
-        self._push(cfg.tick, "tick", None)
-        self._push(3600.0, "hour", None)
+            self._push(req.arrival, Arrival(req))
+        self._push(cfg.tick, Tick())
+        self._push(3600.0, Hour())
         horizon = self.last_arrival + cfg.drain_grace
 
         while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > horizon and kind in ("tick", "hour"):
-                if any(k not in ("tick", "hour") for (_, _, k, _)
-                       in self._heap):
+            t, _, ev = heapq.heappop(self._heap)
+            if t > horizon and isinstance(ev, CONTROL_EVENTS):
+                if any(not isinstance(e, CONTROL_EVENTS)
+                       for (_, _, e) in self._heap):
                     pass  # still work in flight; keep ticking
                 else:
                     break
             self.now = max(self.now, t)
-
-            if kind == "arrival":
-                req: Request = payload
-                if req.tier == TIER_NIW and cfg.queue_manager is not None:
-                    self._note_tps(req, req.region)
-                    cfg.queue_manager.submit(req)
-                else:
-                    region0 = req.region
-                    self._note_tps(req, region0)
-                    self._route_and_enqueue(req)
-
-            elif kind == "retry":
-                self._route_and_enqueue(payload)
-
-            elif kind == "prefill_done":
-                inst: Instance = payload
-                if inst.prefilling is None:
-                    continue  # instance was drained/reaped
-                req, finish, nxt = inst.on_prefill_done(self.now)
-                self._push(finish, "decode_done", (inst, req))
-                if nxt:
-                    self._push(nxt[1], "prefill_done", inst)
-
-            elif kind == "decode_done":
-                inst, req = payload
-                nxt = inst.on_decode_done(req, self.now)
-                if nxt:
-                    self._push(nxt[1], "prefill_done", inst)
-
-            elif kind == "instance_ready":
-                p: PendingInstance = payload
-                inst = self.cluster.on_instance_ready(p, self.now)
-                ev = inst.maybe_start_prefill(self.now)
-                if ev:
-                    self._push(ev[1], "prefill_done", inst)
-
-            elif kind == "tick":
-                self._on_tick()
-                if self._heap or self.now < horizon:
-                    self._push(self.now + cfg.tick, "tick", None)
-
-            elif kind == "hour":
-                self._on_hour()
-                if self.now + 3600.0 < horizon:
-                    self._push(self.now + 3600.0, "hour", None)
+            self.bus.publish(ev)
 
         self.cluster.accrue(self.now)
+        parked = (cfg.queue_manager.depth()
+                  if cfg.queue_manager is not None else 0)
         return build_report(self.name, self.requests, self.cluster,
-                            dict(self.util_trace))
+                            dict(self.util_trace),
+                            retry_dropped=self.retry_dropped,
+                            parked=parked, slo_ttft=cfg.slo_ttft)
+
+    # --------------------------------------------------------- event handlers
+    def _on_arrival(self, ev: Arrival):
+        req: Request = ev.request
+        if req.tier == TIER_NIW and self.cfg.queue_manager is not None:
+            self._note_tps(req, req.region)
+            self.cfg.queue_manager.submit(req)
+        else:
+            self._note_tps(req, req.region)
+            self._route_and_enqueue(req)
+
+    def _on_retry(self, ev: Retry):
+        self._route_and_enqueue(ev.request, attempt=ev.attempt)
+
+    def _on_prefill_done(self, ev: PrefillDone):
+        inst: Instance = ev.instance
+        if inst.prefilling is None:
+            return  # instance was drained/reaped
+        req, finish, nxt = inst.on_prefill_done(self.now)
+        self._push(finish, DecodeDone(inst, req))
+        if nxt:
+            self._push(nxt[1], PrefillDone(inst))
+
+    def _on_decode_done(self, ev: DecodeDone):
+        nxt = ev.instance.on_decode_done(ev.request, self.now)
+        if nxt:
+            self._push(nxt[1], PrefillDone(ev.instance))
+
+    def _on_instance_ready(self, ev: InstanceReady):
+        p: PendingInstance = ev.pending
+        inst = self.cluster.on_instance_ready(p, self.now)
+        started = inst.maybe_start_prefill(self.now)
+        if started:
+            self._push(started[1], PrefillDone(inst))
 
     # ----------------------------------------------------------------- ticks
-    def _on_tick(self):
+    def _on_tick(self, ev: Tick):
         cfg = self.cfg
         self.cluster.accrue(self.now)
         self.cluster.reap_drained(self.now)
         observed = self.observed_tps()
         views = self.cluster.views(observed)
-        if isinstance(cfg.policy, ChironPolicy) and cfg.queue_manager:
+
+        # backlog signals: published for every policy; ones that don't
+        # care inherit the no-op ``observe``
+        if cfg.queue_manager is not None:
             for m in self.models:
                 backlog = cfg.queue_manager.backlog_tokens(m)
                 for r in self.regions:
-                    cfg.policy.note_backlog(m, r,
-                                            backlog / len(self.regions))
+                    cfg.policy.observe(BacklogSignal(
+                        m, r, backlog / len(self.regions)))
         acts = cfg.policy.on_tick(views, self.now)
         if acts:
             self._apply_actions(acts)
@@ -272,8 +327,15 @@ class Simulation:
                      ep.live_count() + len(ep.pending)))
             self._next_sample = self.now + cfg.sample_every
 
-    def _on_hour(self):
+        horizon = self.last_arrival + cfg.drain_grace
+        if self._heap or self.now < horizon:
+            self._push(self.now + cfg.tick, Tick())
+
+    def _on_hour(self, ev: Hour):
         cfg = self.cfg
+        horizon = self.last_arrival + cfg.drain_grace
+        if self.now + 3600.0 < horizon:
+            self._push(self.now + 3600.0, Hour())
         if cfg.controller is None:
             return
         instances = {}

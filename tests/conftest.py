@@ -6,8 +6,16 @@ assert "xla_force_host_platform_device_count" not in os.environ.get(
     "XLA_FLAGS", "")
 
 # Deterministic hypothesis runs: no example database (stale examples from
-# earlier strategy definitions must not replay).
-from hypothesis import settings
+# earlier strategy definitions must not replay).  hypothesis is optional:
+# without it, property tests are skipped at collection.
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
+else:
+    settings.register_profile("repro", database=None, deadline=None)
+    settings.load_profile("repro")
 
-settings.register_profile("repro", database=None, deadline=None)
-settings.load_profile("repro")
+# Property tests need hypothesis; auto-skip them when it's absent.
+collect_ignore = ([] if settings is not None
+                  else ["test_properties.py", "test_scheduling.py"])

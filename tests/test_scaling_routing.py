@@ -1,5 +1,8 @@
 """Scaling policies + routing logic."""
-from repro.core.routing import pick_endpoint, route_global, route_jsq
+import pytest
+
+from repro.core.routing import (ThresholdRouter, pick_endpoint,
+                                route_global, route_jsq)
 from repro.core.scaling import EndpointView, LTPolicy, ReactivePolicy
 
 
@@ -54,6 +57,28 @@ def test_route_global_threshold_then_least():
     assert route_global(utils, ["a", "b", "c"], 0.7) == "b"
     assert route_global({"a": 0.9, "b": 0.95}, ["a", "b"], 0.7) == "a"
     assert route_global(utils, ["c"], 0.7) == "c"
+
+
+def test_route_global_empty_utils_falls_back_home():
+    # regression: used to raise ValueError on min() over an empty dict
+    assert route_global({}, ["home", "b"], 0.7) == "home"
+    with pytest.raises(ValueError):
+        route_global({}, [], 0.7)
+
+
+def test_route_global_skips_absent_preferred_regions():
+    # preferred regions with no deployed endpoint are skipped, not
+    # silently treated as candidates
+    utils = {"b": 0.9, "c": 0.2}
+    assert route_global(utils, ["missing", "c", "b"], 0.7) == "c"
+    # none under threshold: least-utilized among *known* regions
+    assert route_global({"b": 0.9, "c": 0.8}, ["missing", "b"], 0.7) == "c"
+
+
+def test_threshold_router_protocol():
+    r = ThresholdRouter(threshold=0.7)
+    assert r.route({"a": 0.9, "b": 0.5}, ["a", "b"]) == "b"
+    assert r.route({}, ["home"]) == "home"
 
 
 def test_jsq_and_endpoint_pick():
