@@ -1,0 +1,234 @@
+"""Simulator performance benchmark — the repo's tracked perf trajectory.
+
+Times trace generation (columnar + object materialization) and
+simulation (wall-clock, events/sec, peak RSS) on pinned reference
+configs and writes ``BENCH_sim.json``.  Future PRs re-run this to catch
+hot-path regressions; see docs/PERF.md for how to read the output.
+
+Pinned configs
+--------------
+- ``reference``       1-day, 3-region, 4-model trace at ``scale=0.05``
+                      through the fig8 unified stack (reactive scaler +
+                      NIW queue manager) — the config named in ISSUE 2.
+- ``reference_fleet`` same trace, but with the fleet floored at
+                      ``FLEET_FLOOR`` instances per (model, region), the
+                      paper's production deployment size (Fig. 11 shows
+                      hundreds of instances per model-region).  This is
+                      the config where the pre-refactor O(fleet)
+                      per-arrival scans dominate — the super-linear term
+                      this PR removed.
+- ``full_scale``      (``--full``) the paper's native-scale evaluation:
+                      1-day, 3-region, 4-model at ``scale=1.0``
+                      (~4.9M requests).
+
+Usage::
+
+    python -m benchmarks.perf_sim --smoke            # <30s CI probe
+    python -m benchmarks.perf_sim --out BENCH_sim.json
+    python -m benchmarks.perf_sim --full --out BENCH_sim.json
+    python -m benchmarks.perf_sim --baseline head.json --out BENCH_sim.json
+
+``--baseline`` embeds a previously measured baseline (e.g. the pre-PR
+HEAD, measured on the same machine) and records end-to-end speedups.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import platform
+import resource
+import sys
+import time
+
+
+FLEET_FLOOR = 150          # instances per (model, region), paper-scale fleet
+REFERENCE_SCALE = 0.05
+REFERENCE_DAYS = 1.0
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _stack_spec(fleet_floor=None):
+    from benchmarks.common import BenchSpec
+    from repro.api import PolicySpec, StackSpec
+    from repro.sim.workload import REGIONS
+    spec = BenchSpec(days=REFERENCE_DAYS, scale=REFERENCE_SCALE)
+    if fleet_floor is None:
+        scaler = PolicySpec("reactive")
+        initial, spare = spec.initial_instances, spec.spot_spare
+    else:
+        scaler = PolicySpec("reactive", {"min_instances": fleet_floor})
+        initial, spare = fleet_floor, 4 * fleet_floor
+    return StackSpec(models=tuple(spec.models), regions=tuple(REGIONS),
+                     scaler=scaler, initial_instances=initial,
+                     spot_spare=spare)
+
+
+def time_generation(days: float, scale: float, seed: int = 0) -> dict:
+    """Columnar generation + Request materialization timings."""
+    from repro.sim.workload import WorkloadSpec, generate_trace
+    t0 = time.perf_counter()
+    trace = generate_trace(WorkloadSpec(days=days, scale=scale, seed=seed))
+    t_gen = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    reqs = trace.to_requests()
+    t_mat = time.perf_counter() - t0
+    n = len(reqs)
+    return {
+        "n_requests": n,
+        "generate_columnar_s": round(t_gen, 3),
+        "materialize_s": round(t_mat, 3),
+        "requests_per_s_columnar": int(n / max(t_gen, 1e-9)),
+        "requests_per_s_end_to_end": int(n / max(t_gen + t_mat, 1e-9)),
+        "_requests": reqs,   # stripped before serialization
+    }
+
+
+def time_simulation(reqs, stack_spec, name: str, repeats: int = 3) -> dict:
+    """Best-of-N simulation wall-clock + events/sec on a built stack."""
+    from repro.api import build_stack
+    from repro.sim.simulator import Simulation
+    best, events, report = math.inf, 0, None
+    for _ in range(max(repeats, 1)):
+        stack = build_stack(stack_spec)
+        sim = Simulation(reqs, stack.sim_config(),
+                         models=list(stack_spec.models),
+                         regions=list(stack_spec.regions),
+                         profiles=stack.profiles, name=name)
+        t0 = time.perf_counter()
+        report = sim.run()
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, events = dt, sim.events_processed
+    done = sum(report.completed.values())
+    return {
+        "n_requests": len(reqs),
+        "wall_s_best": round(best, 3),
+        "repeats": repeats,
+        "events_processed": events,
+        "events_per_s": int(events / max(best, 1e-9)),
+        "requests_per_s": int(len(reqs) / max(best, 1e-9)),
+        "completed_fraction": round(done / max(len(reqs), 1), 5),
+        "peak_rss_mb": round(_rss_mb(), 1),
+    }
+
+
+def bench(full: bool = False, repeats: int = 3, out: str = None,
+          baseline_path: str = None, fleet_floor: int = FLEET_FLOOR) -> dict:
+    from benchmarks.common import csv_line
+    result = {
+        "machine": {"python": platform.python_version(),
+                    "platform": platform.platform(),
+                    "processor": platform.processor() or "unknown"},
+        "config": {"days": REFERENCE_DAYS, "scale": REFERENCE_SCALE,
+                   "fleet_floor": fleet_floor, "repeats": repeats},
+    }
+
+    gen = time_generation(REFERENCE_DAYS, REFERENCE_SCALE)
+    reqs = gen.pop("_requests")
+    result["trace_gen"] = gen
+    csv_line("perf.gen.requests_per_s", gen["requests_per_s_end_to_end"],
+             f"{gen['n_requests']} requests")
+
+    for name, floor in (("reference", None), ("reference_fleet",
+                                              fleet_floor)):
+        r = time_simulation(reqs, _stack_spec(floor), name, repeats)
+        result[name] = r
+        csv_line(f"perf.{name}.events_per_s", r["events_per_s"],
+                 f"{r['wall_s_best']}s best of {repeats}")
+
+    if full:
+        gen_f = time_generation(REFERENCE_DAYS, 1.0)
+        reqs_f = gen_f.pop("_requests")
+        r = time_simulation(reqs_f, _stack_spec(None), "full_scale",
+                            repeats=1)
+        r["generate_columnar_s"] = gen_f["generate_columnar_s"]
+        r["materialize_s"] = gen_f["materialize_s"]
+        result["full_scale"] = r
+        csv_line("perf.full_scale.events_per_s", r["events_per_s"],
+                 f"{r['n_requests']} requests, {r['wall_s_best']}s")
+        del reqs_f
+
+    if baseline_path:
+        with open(baseline_path) as f:
+            base = json.load(f)
+        result["baseline"] = base
+        speed = {}
+        for name in ("reference", "reference_fleet"):
+            b = base.get(name, {})
+            if "end_to_end_s" in b and name in result:
+                new_e2e = (gen["generate_columnar_s"]
+                           + gen["materialize_s"]
+                           + result[name]["wall_s_best"])
+                speed[name] = {
+                    "baseline_end_to_end_s": b["end_to_end_s"],
+                    "new_end_to_end_s": round(new_e2e, 3),
+                    "speedup": round(b["end_to_end_s"] / new_e2e, 2),
+                }
+        result["speedup_vs_baseline"] = speed
+        for name, s in speed.items():
+            csv_line(f"perf.speedup.{name}", s["speedup"],
+                     f"{s['baseline_end_to_end_s']}s -> "
+                     f"{s['new_end_to_end_s']}s")
+
+    if out:
+        serializable = {k: v for k, v in result.items()}
+        with open(out, "w") as f:
+            json.dump(serializable, f, indent=1, sort_keys=True)
+        print(f"# wrote {out}", flush=True)
+    return result
+
+
+def smoke() -> int:
+    """<30 s probe for scripts/check.sh: fails on crash or a stalled
+    simulator, prints events/sec."""
+    from benchmarks.common import csv_line
+    print("name,value,derived", flush=True)
+    gen = time_generation(days=0.1, scale=0.02, seed=0)
+    reqs = gen.pop("_requests")
+    csv_line("perf_smoke.gen.requests_per_s",
+             gen["requests_per_s_end_to_end"], f"{gen['n_requests']} reqs")
+    r = time_simulation(reqs, _stack_spec(None), "perf_smoke", repeats=1)
+    csv_line("perf_smoke.sim.events_per_s", r["events_per_s"],
+             f"{r['wall_s_best']}s wall")
+    if r["completed_fraction"] < 0.9:
+        print(f"FAILED perf smoke: only {r['completed_fraction']:.1%} "
+              f"completed", file=sys.stderr)
+        return 1
+    if r["events_per_s"] < 1000:
+        print(f"FAILED perf smoke: {r['events_per_s']} events/s is "
+              f"implausibly slow", file=sys.stderr)
+        return 1
+    print("# perf smoke ok", flush=True)
+    return 0
+
+
+def run(quick: bool = False):
+    """benchmarks.run entry point."""
+    return bench(full=False, repeats=1 if quick else 3)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="include the scale=1.0 (~4.9M request) run")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=None, help="write BENCH_sim.json here")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON with baseline timings to embed + compare")
+    ap.add_argument("--fleet-floor", type=int, default=FLEET_FLOOR)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+    print("name,value,derived", flush=True)
+    bench(full=args.full, repeats=args.repeats, out=args.out,
+          baseline_path=args.baseline, fleet_floor=args.fleet_floor)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -56,14 +56,22 @@ def main(argv=None) -> int:
                     help="tiny <60s strategy sweep for CI")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--bench-out", default=None, metavar="BENCH_sim.json",
+                    help="also run the simulator perf benchmark "
+                         "(benchmarks.perf_sim) and write its JSON here")
     args = ap.parse_args(argv)
     if args.smoke:
-        return smoke()
+        rc = smoke()
+        if rc == 0 and args.bench_out:
+            from benchmarks import perf_sim
+            perf_sim.bench(repeats=1, out=args.bench_out)
+        return rc
 
     from benchmarks import (fig8_unified_vs_siloed, fig11_instance_hours,
                             fig14_scalability_moe, fig15_schedulers,
                             fig16_bursts_week, fig_ablation, kernel_bench,
-                            tab3_workload_characterization, tab_ilp_solver)
+                            perf_sim, tab3_workload_characterization,
+                            tab_ilp_solver)
     benches = {
         "tab3_workload_characterization": tab3_workload_characterization,
         "tab_ilp_solver": tab_ilp_solver,
@@ -74,6 +82,7 @@ def main(argv=None) -> int:
         "fig15_schedulers": fig15_schedulers,
         "fig16_bursts_week": fig16_bursts_week,
         "fig_ablation": fig_ablation,
+        "perf_sim": perf_sim,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,value,derived", flush=True)
@@ -81,6 +90,8 @@ def main(argv=None) -> int:
     for name, mod in benches.items():
         if only and name not in only:
             continue
+        if name == "perf_sim" and args.bench_out and not only:
+            continue  # --bench-out runs it below with the JSON output
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
@@ -93,6 +104,9 @@ def main(argv=None) -> int:
         for n, e in failures:
             print(f"FAILED {n}: {e}", file=sys.stderr)
         return 1
+    if args.bench_out:
+        from benchmarks import perf_sim as _ps
+        _ps.bench(repeats=1 if args.quick else 3, out=args.bench_out)
     print("# all benchmarks complete", flush=True)
     return 0
 

@@ -19,4 +19,7 @@ python -m pytest "${PYTEST_ARGS[@]}"
 echo "== smoke benchmark (tiny trace, all strategies via build_stack) =="
 python -m benchmarks.run --smoke
 
+echo "== perf smoke (simulator hot path, events/sec) =="
+python -m benchmarks.perf_sim --smoke
+
 echo "== check.sh OK =="

@@ -52,6 +52,12 @@ class ThresholdRouter:
               preference: Sequence[str]) -> str:
         return route_global(dict(region_utils), preference, self.threshold)
 
+    def home_threshold(self) -> float:
+        """Optional fast-path capability (duck-typed by the simulator):
+        a utilization bound below which the first preferred region always
+        wins, letting callers skip assembling the full utils map."""
+        return self.threshold
+
 
 @register("router", "threshold")
 def _make_threshold_router(ctx, **kwargs) -> ThresholdRouter:

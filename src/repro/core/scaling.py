@@ -21,7 +21,7 @@ from repro.api.signals import Signal
 Key = Tuple[str, str]  # (model, region)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class EndpointView:
     model: str
     region: str
@@ -32,7 +32,7 @@ class EndpointView:
     pool: str = "unified"  # siloed policies: "IW" | "NIW"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ScaleAction:
     model: str
     region: str
@@ -72,6 +72,14 @@ class ReactivePolicy(ScalingPolicy):
         self.up, self.down, self.cooldown = up, down, cooldown
         self.min_instances = min_instances
         self._last: Dict[Tuple[Key, str], float] = {}
+
+    def wants_request_view(self, model: str, region: str, pool: str,
+                           now: float) -> bool:
+        """Optional fast-path capability (duck-typed by the simulator):
+        within the cooldown the per-request hook can never act, so the
+        caller may skip building the EndpointView entirely."""
+        return now - self._last.get(((model, region), pool),
+                                    -1e18) >= self.cooldown
 
     def on_request(self, v: EndpointView, now: float) -> List[ScaleAction]:
         key = ((v.model, v.region), v.pool)

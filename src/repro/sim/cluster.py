@@ -11,9 +11,10 @@ pool is donated (leased) time, a recovered opportunity cost.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.scaling import EndpointView, ScaleAction
 from repro.sim.instance import Instance
@@ -21,6 +22,10 @@ from repro.sim.perfmodel import PerfProfile
 from repro.sim.types import Request
 
 Key = Tuple[str, str]
+
+# rebuild the lazy JSQ heap once stale entries outnumber live ones by this
+_HEAP_COMPACT_SLACK = 64
+_HEAP_COMPACT_FACTOR = 8
 
 
 @dataclasses.dataclass
@@ -39,7 +44,18 @@ class SpotVM:
 
 
 class Endpoint:
-    """All instances of one model in one region (optionally per pool)."""
+    """All instances of one model in one region (optionally per pool).
+
+    Per-arrival queries (``util``, ``live_count``, ``pick_jsq``) are O(1)
+    amortized: the endpoint subscribes to every instance's load-change
+    hook and maintains (a) the summed reserved KV tokens over live
+    instances — utilization is exact integer bookkeeping, never a float
+    drift-accumulator — and (b) a lazy min-heap over ``(remaining_tokens,
+    iid)`` for JSQ.  Heap entries are invalidated by comparison against
+    the instance's current load and compacted when stale entries pile up,
+    so routing cost no longer grows with fleet size (the pre-refactor
+    full scans were the dominant super-linear term at production scale).
+    """
 
     def __init__(self, model: str, region: str, profile: PerfProfile,
                  order_fn: Callable, pool: str = "unified"):
@@ -51,30 +67,109 @@ class Endpoint:
         self.instances: Dict[str, Instance] = {}
         self.pending: List[PendingInstance] = []
         self._iid = itertools.count()
+        # incremental aggregates over live (non-draining) instances
+        self._live = 0
+        self._reserved_sum = 0
+        self._jsq_heap: List[Tuple[int, str]] = []
+        self._draining: Set[str] = set()
+        self._compact_at = _HEAP_COMPACT_SLACK
 
     def new_instance(self, now: float) -> Instance:
         iid = f"{self.model}/{self.region}/{self.pool}/{next(self._iid)}"
         inst = Instance(iid, self.model, self.region, self.profile,
                         self.order_fn)
         inst.acquired_at = now
+        inst.listener = self._on_instance_change
         self.instances[iid] = inst
+        self._live += 1
+        self._compact_at = _HEAP_COMPACT_SLACK + \
+            _HEAP_COMPACT_FACTOR * len(self.instances)
+        heapq.heappush(self._jsq_heap, (inst.rem, iid))
         return inst
+
+    # ------------------------------------------------------- O(1) aggregates
+    def _on_instance_change(self, inst: Instance, d_reserved: int,
+                            d_remaining: int) -> None:
+        if inst.draining:
+            return  # already removed from the live aggregates
+        if d_reserved:
+            self._reserved_sum += d_reserved
+        if d_remaining:
+            heap = self._jsq_heap
+            heapq.heappush(heap, (inst.rem, inst.iid))
+            if len(heap) > self._compact_at:
+                self._compact_heap()
+
+    def _compact_heap(self) -> None:
+        self._jsq_heap = [(i.rem, iid)
+                          for iid, i in self.instances.items()
+                          if not i.draining]
+        heapq.heapify(self._jsq_heap)
+
+    def drain(self, inst: Instance) -> None:
+        """Mark for scale-in: leaves the live aggregates immediately."""
+        if inst.draining:
+            return
+        inst.draining = True
+        self._live -= 1
+        self._reserved_sum -= inst.reserved_tokens
+        self._draining.add(inst.iid)
+
+    def remove(self, inst: Instance) -> None:
+        """Reap a drained instance (stale heap entries expire lazily)."""
+        del self.instances[inst.iid]
+        self._draining.discard(inst.iid)
+        self._compact_at = _HEAP_COMPACT_SLACK + \
+            _HEAP_COMPACT_FACTOR * len(self.instances)
+        inst.listener = None
+
+    def drained_idle(self) -> List[Instance]:
+        """Draining instances that have gone idle — O(draining), not
+        O(fleet), so the per-tick reap scan stays cheap."""
+        return [self.instances[iid] for iid in self._draining
+                if self.instances[iid].idle]
 
     @property
     def util(self) -> float:
-        live = [i for i in self.instances.values() if not i.draining]
-        if not live:
+        if not self._live:
             return 1.0  # no capacity == saturated for routing purposes
-        return sum(i.util for i in live) / len(live)
+        # reserved <= kv_capacity per instance (admission control), so the
+        # per-instance min(, 1.0) clamp of Instance.util never binds and
+        # the mean reduces to an exact integer-sum ratio
+        return self._reserved_sum / self.profile.kv_capacity_tokens \
+            / self._live
 
     def live_count(self) -> int:
-        return sum(1 for i in self.instances.values() if not i.draining)
+        return self._live
 
     def pick_jsq(self) -> Optional[Instance]:
-        cands = [i for i in self.instances.values() if not i.draining]
-        if not cands:
-            return None
-        return min(cands, key=lambda i: (i.remaining_tokens(), i.iid))
+        heap = self._jsq_heap
+        instances = self.instances
+        while heap:
+            rem, iid = heap[0]
+            inst = instances.get(iid)
+            if inst is None or inst.draining or rem != inst.rem:
+                heapq.heappop(heap)  # stale: superseded or gone
+                continue
+            return inst
+        return None
+
+    def scan_check(self) -> None:
+        """Debug/test hook: assert the O(1) aggregates equal full scans."""
+        live = [i for i in self.instances.values() if not i.draining]
+        assert self._live == len(live)
+        assert self._reserved_sum == sum(i.reserved_tokens for i in live)
+        for i in self.instances.values():
+            assert i.rem == i._remaining_scan(), i.iid
+        want = (min(live, key=lambda i: (i.remaining_tokens(), i.iid))
+                if live else None)
+        got = self.pick_jsq()
+        if want is None:
+            assert got is None
+        else:
+            assert got is not None
+            assert ((got.remaining_tokens(), got.iid)
+                    == (want.remaining_tokens(), want.iid))
 
 
 class Cluster:
@@ -173,7 +268,7 @@ class Cluster:
                 victim = self._pick_drain(ep)
                 if victim is None:
                     break
-                victim.draining = True
+                ep.drain(victim)
                 self.scale_in_events += 1
         return events
 
@@ -209,10 +304,8 @@ class Cluster:
         self.accrue(now)
         n = 0
         for (m, r, pool), ep in self.endpoints.items():
-            done = [i for i in ep.instances.values()
-                    if i.draining and i.idle]
-            for inst in done:
-                del ep.instances[inst.iid]
+            for inst in ep.drained_idle():
+                ep.remove(inst)
                 self.spot[r].append(SpotVM(m, now))
                 n += 1
         return n

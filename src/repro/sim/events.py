@@ -13,44 +13,44 @@ import dataclasses
 from typing import Callable, Dict, List, Type
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class Event:
     """Base simulator event (heap ordering is by time, never by event)."""
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class Arrival(Event):
     request: object
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class Retry(Event):
     request: object
     attempt: int = 1
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class PrefillDone(Event):
     instance: object
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class DecodeDone(Event):
     instance: object
     request: object
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class InstanceReady(Event):
     pending: object
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class Tick(Event):
     """Periodic control-plane tick (scaling, QM signals, sampling)."""
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(eq=False, slots=True)
 class Hour(Event):
     """Hourly planning boundary (forecast + ILP)."""
 
@@ -58,6 +58,9 @@ class Hour(Event):
 # Control events keep firing while work is in flight but must not extend
 # the simulation past its horizon on their own.
 CONTROL_EVENTS = (Tick, Hour)
+# Exact-class set for the hot loop (isinstance is ~4x slower); derived,
+# so new control event types only need adding to CONTROL_EVENTS.
+CONTROL_EVENT_SET = frozenset(CONTROL_EVENTS)
 
 
 class HookBus:
@@ -69,6 +72,9 @@ class HookBus:
 
     def subscribe(self, etype: Type[Event], handler: Callable) -> None:
         self._handlers.setdefault(etype, []).append(handler)
+
+    def handlers_for(self, etype: Type[Event]) -> List[Callable]:
+        return self._handlers.get(etype, [])
 
     def publish(self, event: Event) -> None:
         for handler in self._handlers.get(type(event), ()):

@@ -15,6 +15,12 @@ threshold), as in the production system.
 All load accounting is incremental (O(1) per event) so JSQ routing stays
 cheap at millions of requests; queue re-ordering falls back to FIFO past
 ``SORT_LIMIT`` waiting requests (deep-overload guard).
+
+Every mutation of the load counters fires the instance's ``listener``
+hook (set by the owning ``Endpoint``) with the reserved-token and
+remaining-token deltas, so endpoint-level aggregates (mean utilization,
+the JSQ heap) are maintained in O(1) instead of re-scanned per arrival —
+see ``repro.sim.cluster.Endpoint``.
 """
 from __future__ import annotations
 
@@ -44,8 +50,15 @@ class Instance:
         self.reserved_tokens: int = 0
         self._waiting_tokens: int = 0
         self._decode_out_tokens: int = 0
+        self.rem: int = 0             # cached remaining_tokens() value
+        self._cap: int = profile.kv_capacity_tokens
+        self._max_batch: int = profile.max_batch
         self.draining = False         # no new admissions (scale-in)
         self.acquired_at: float = 0.0
+        # O(1)-aggregate hook: called as listener(self, d_reserved,
+        # d_remaining) after any load-counter change (Endpoint sets it)
+        self.listener: Optional[Callable] = None
+        self.pf_event = None  # simulator's cached PrefillDone for this inst
 
     # ------------------------------------------------------------- metrics
     @property
@@ -58,9 +71,14 @@ class Instance:
         return len(self.decoding) / max(self.profile.max_batch, 1)
 
     def remaining_tokens(self) -> int:
+        return self.rem
+
+    def _remaining_scan(self) -> int:
+        """Reference recomputation of ``rem`` (tests/debug only)."""
         rem = self._waiting_tokens + self._decode_out_tokens
-        if self.prefilling is not None:
-            rem += self.prefilling.total_tokens
+        p = self.prefilling
+        if p is not None:
+            rem += p.prompt_tokens + p.output_tokens
         return rem
 
     @property
@@ -71,7 +89,12 @@ class Instance:
     # --------------------------------------------------------------- intake
     def enqueue(self, req: Request, now: float) -> Optional[Tuple[str, float]]:
         self.waiting.append(req)
-        self._waiting_tokens += req.total_tokens
+        t = req.prompt_tokens + req.output_tokens
+        self._waiting_tokens += t
+        self.rem += t
+        lis = self.listener
+        if lis is not None:
+            lis(self, 0, t)
         return self.maybe_start_prefill(now)
 
     def maybe_start_prefill(self, now: float) -> Optional[Tuple[str, float]]:
@@ -85,34 +108,44 @@ class Instance:
         Returns ("prefill_done", t) to schedule, or None."""
         if self.prefilling is not None or not self.waiting:
             return None
-        if len(self.decoding) >= self.profile.max_batch:
+        if len(self.decoding) >= self._max_batch:
             return None
-        if len(self.waiting) <= SORT_LIMIT:
-            self.waiting = self.order_fn(self.waiting, now)
-        cap = self.profile.kv_capacity_tokens
+        waiting = self.waiting
+        if 1 < len(waiting) <= SORT_LIMIT:
+            waiting = self.waiting = self.order_fn(waiting, now)
+        cap = self._cap
+        reserved = self.reserved_tokens
         pick = None
         idx = 0
         scanned = 0
-        while idx < len(self.waiting) and scanned < SCAN_LIMIT:
-            r = self.waiting[idx]
-            if r.total_tokens > cap:
+        while idx < len(waiting) and scanned < SCAN_LIMIT:
+            r = waiting[idx]
+            t = r.prompt_tokens + r.output_tokens
+            if t > cap:
                 # can never fit on this instance type: reject outright
-                self.waiting.pop(idx)
-                self._waiting_tokens -= r.total_tokens
+                waiting.pop(idx)
+                self._waiting_tokens -= t
+                self.rem -= t
                 r.instance = "REJECTED"
+                lis = self.listener
+                if lis is not None:
+                    lis(self, 0, -t)
                 continue
-            if self.reserved_tokens + r.total_tokens <= cap:
+            if reserved + t <= cap:
                 pick = idx
                 break
             idx += 1
             scanned += 1
         if pick is None:
             return None
-        req = self.waiting.pop(pick)
-        need = req.total_tokens
+        req = waiting.pop(pick)
+        need = req.prompt_tokens + req.output_tokens
         self._waiting_tokens -= need
-        self.reserved_tokens += need
+        self.reserved_tokens = reserved + need
         self.prefilling = req
+        lis = self.listener
+        if lis is not None:
+            lis(self, need, 0)  # remaining unchanged: waiting → prefilling
         req.admitted = now
         req.instance = self.iid
         req.served_region = self.region
@@ -131,14 +164,26 @@ class Instance:
         finish = now + req.output_tokens * tbt
         self.decoding[req.rid] = req
         self._decode_out_tokens += req.output_tokens
+        self.rem -= req.prompt_tokens
+        lis = self.listener
+        if lis is not None:
+            lis(self, 0, -req.prompt_tokens)  # prefill slot freed
         nxt = self.maybe_start_prefill(now)
         return req, finish, nxt
 
     def on_decode_done(self, req: Request, now: float
                        ) -> Optional[Tuple[str, float]]:
+        d_rem = 0
+        out = req.output_tokens
+        total = req.prompt_tokens + out
         if req.rid in self.decoding:
             del self.decoding[req.rid]
-            self._decode_out_tokens -= req.output_tokens
-        self.reserved_tokens -= req.total_tokens
+            self._decode_out_tokens -= out
+            d_rem = -out
+            self.rem -= out
+        self.reserved_tokens -= total
         req.e2e = now - req.arrival
+        lis = self.listener
+        if lis is not None:
+            lis(self, -total, d_rem)
         return self.maybe_start_prefill(now)

@@ -11,6 +11,13 @@ see the cluster only through ``EndpointView``s and ``Signal``s — the
 simulator never special-cases a concrete policy class.  Stacks are
 normally assembled declaratively via ``repro.api.build_stack``;
 ``SimConfig`` remains the low-level wiring record it produces.
+
+Hot-path design (see docs/PERF.md): arrivals are fed from a sorted
+cursor instead of pre-heaped (10M heap entries would dominate memory and
+log-factor cost), endpoint load queries are O(1) incremental aggregates
+(``repro.sim.cluster.Endpoint``), TPS accounting is a bounded ring
+buffer (``repro.sim.tps.TpsHistory``), and the drain check keeps an
+in-flight work-event counter instead of scanning the heap.
 """
 from __future__ import annotations
 
@@ -25,14 +32,15 @@ import numpy as np
 
 from repro.api.registry import resolve
 from repro.api.signals import BacklogSignal
-from repro.core.scaling import EndpointView, ScaleAction
+from repro.core.scaling import EndpointView, ScaleAction, ScalingPolicy
 from repro.sim.cluster import Cluster, PendingInstance
-from repro.sim.events import (CONTROL_EVENTS, Arrival, DecodeDone, Event,
-                              HookBus, Hour, InstanceReady, PrefillDone,
-                              Retry, Tick)
+from repro.sim.events import (CONTROL_EVENT_SET, Arrival, DecodeDone,
+                              Event, HookBus, Hour, InstanceReady,
+                              PrefillDone, Retry, Tick)
 from repro.sim.instance import Instance
 from repro.sim.metrics import Report, build_report
 from repro.sim.perfmodel import PROFILES, PerfProfile
+from repro.sim.tps import TpsHistory
 from repro.sim.types import Request, TIER_NIW
 
 Key = Tuple[str, str]
@@ -66,6 +74,11 @@ class SimConfig:
     # (repro.sim.types.TTFT_SLA).  Request deadlines themselves are a
     # workload property, set at trace generation.
     slo_ttft: Optional[Dict[str, float]] = None
+    # TPS/history retention: bucket memory and the forecaster's fitting
+    # window are bounded by this lookback, independent of run length.
+    # Runs shorter than the lookback see bit-identical history to the
+    # old unbounded accounting.
+    history_lookback: float = 8 * 86400.0
 
 
 class Simulation:
@@ -93,24 +106,51 @@ class Simulation:
                                order_fn, pools=pools,
                                initial_per_pool=per_pool,
                                spot_spare=cfg.spot_spare)
+        # per-(model, pool) region → endpoint map for the routing hot path
+        self._region_eps: Dict[Tuple[str, str], Dict[str, object]] = {
+            (m, pool): {r: self.cluster.endpoint(m, r, pool)
+                        for r in self.regions}
+            for m in self.models for pool in pools}
 
         self._heap: List = []
         self._seq = itertools.count()
+        self._inflight = 0       # non-control events currently in the heap
+        self.events_processed = 0
         self.now = 0.0
         self.last_arrival = (max(r.arrival for r in requests)
                              if requests else 0.0)
 
-        # observed input-TPS history per (model, region), window buckets
-        self._tps_buckets: Dict[Key, defaultdict] = {
-            (m, r): defaultdict(float)
-            for m in self.models for r in self.regions}
-        self._niw_tps_buckets: Dict[Key, defaultdict] = {
-            (m, r): defaultdict(float)
-            for m in self.models for r in self.regions}
+        # observed input-TPS history per (model, region): bounded ring
+        # buffers (memory O(lookback), not O(run length))
+        keys = [(m, r) for m in self.models for r in self.regions]
+        lookback = max(cfg.history_lookback,
+                       3600.0 + 2 * cfg.tps_window)   # niw_last_hour floor
+        self.tps = TpsHistory(keys, cfg.tps_window, lookback)
+        self.niw_tps = TpsHistory(keys, cfg.tps_window, lookback)
         self.util_trace: Dict[Key, List[Tuple[float, float, int]]] = \
             defaultdict(list)
         self._next_sample = 0.0
         self.retry_dropped = 0
+
+        # skip per-arrival EndpointView construction when the policy
+        # inherits the base no-op on_request hook
+        on_req = getattr(type(cfg.policy), "on_request", None)
+        self._wants_request_hook = (
+            on_req is not None and on_req is not ScalingPolicy.on_request)
+        # routers may advertise a pure home-first threshold (see
+        # ThresholdRouter.home_threshold): below it the home region always
+        # wins, so the per-arrival utils map can be skipped entirely
+        home_thr = getattr(self.router, "home_threshold", None)
+        self._home_thr = home_thr() if callable(home_thr) else None
+        # policies may advertise a cheap pre-check (cooldown) that
+        # predicts on_request cannot act, skipping the view build
+        gate = getattr(cfg.policy, "wants_request_view", None)
+        self._request_view_gate = gate if callable(gate) else None
+        # signals are only synthesized for policies that override the
+        # base no-op observe
+        obs = getattr(type(cfg.policy), "observe", None)
+        self._wants_signals = (
+            obs is not None and obs is not ScalingPolicy.observe)
 
         self.bus = HookBus()
         self.bus.subscribe(Arrival, self._on_arrival)
@@ -123,62 +163,49 @@ class Simulation:
 
     # --------------------------------------------------------------- helpers
     def _push(self, t: float, event: Event):
+        if event.__class__ not in CONTROL_EVENT_SET:
+            self._inflight += 1
         heapq.heappush(self._heap, (t, next(self._seq), event))
 
-    def _pool_for(self, req: Request) -> str:
-        if not self.cfg.siloed:
-            return "unified"
-        return "NIW" if req.tier == TIER_NIW else "IW"
-
     def _note_tps(self, req: Request, region: str):
-        b = int(req.arrival / self.cfg.tps_window)
-        self._tps_buckets[(req.model, region)][b] += (
-            req.prompt_tokens / self.cfg.tps_window)
+        v = req.prompt_tokens / self.cfg.tps_window
+        self.tps.note((req.model, region), req.arrival, v)
         if req.tier == TIER_NIW:
-            self._niw_tps_buckets[(req.model, region)][b] += (
-                req.prompt_tokens / self.cfg.tps_window)
+            self.niw_tps.note((req.model, region), req.arrival, v)
 
     def observed_tps(self, horizon: float = 300.0) -> Dict[Key, float]:
         """Mean input TPS over the trailing `horizon` seconds."""
-        w = self.cfg.tps_window
-        b_hi = int(self.now / w)
-        nb = max(int(horizon / w), 1)
-        out = {}
-        for key, buckets in self._tps_buckets.items():
-            out[key] = sum(buckets.get(b, 0.0)
-                           for b in range(b_hi - nb + 1, b_hi + 1)) / nb
-        return out
+        return self.tps.window_mean(self.now, horizon, include_current=True)
 
     def history_series(self) -> Dict[Key, np.ndarray]:
-        w = self.cfg.tps_window
-        b_hi = int(self.now / w)
-        out = {}
-        for key, buckets in self._tps_buckets.items():
-            out[key] = np.array([buckets.get(b, 0.0)
-                                 for b in range(0, b_hi)])
-        return out
+        return self.tps.series(self.now)
 
     def niw_last_hour(self) -> Dict[Key, float]:
-        w = self.cfg.tps_window
-        b_hi = int(self.now / w)
-        nb = max(int(3600.0 / w), 1)
-        return {key: sum(b.get(i, 0.0) for i in range(b_hi - nb, b_hi)) / nb
-                for key, b in self._niw_tps_buckets.items()}
+        return self.niw_tps.window_mean(self.now, 3600.0,
+                                        include_current=False)
 
     # --------------------------------------------------------------- routing
     def _route_and_enqueue(self, req: Request, forced_region: str = None,
                            attempt: int = 0):
         cfg = self.cfg
-        pool = self._pool_for(req)
+        pool = ("unified" if not cfg.siloed else
+                ("NIW" if req.tier == TIER_NIW else "IW"))
+        eps = self._region_eps[(req.model, pool)]
         if forced_region is not None:
             region = forced_region
+            ep = eps[region]
         else:
-            utils = {r: self.cluster.endpoint(req.model, r, pool).util
-                     for r in self.regions}
-            pref = [req.region] + [r for r in self.regions
-                                   if r != req.region]
-            region = self.router.route(utils, pref)
-        ep = self.cluster.endpoint(req.model, region, pool)
+            region = req.region
+            ep = eps[region]
+            thr = self._home_thr
+            if thr is None or ep.util >= thr:
+                utils = {r: eps[r].util for r in self.regions}
+                pref = [region] + [r for r in self.regions
+                                   if r != region]
+                routed = self.router.route(utils, pref)
+                if routed != region:
+                    region = routed
+                    ep = eps[region]
         inst = ep.pick_jsq()
         if inst is None:
             # endpoint has zero live instances: exponential backoff, then
@@ -193,12 +220,18 @@ class Simulation:
             return
         ev = inst.enqueue(req, self.now)
         if ev:
-            self._push(ev[1], PrefillDone(inst))
-        # reactive per-request trigger
-        view = EndpointView(req.model, region, ep.util, ep.live_count(),
-                            len(ep.pending), 0.0, pool)
-        for act in cfg.policy.on_request(view, self.now):
-            self._apply_actions([act])
+            self._push(ev[1], self._pf_event(inst))
+        # reactive per-request trigger (view built only for policies that
+        # override the base no-op hook and pass their own pre-check)
+        if self._wants_request_hook:
+            gate = self._request_view_gate
+            if gate is None or gate(req.model, region, pool, self.now):
+                view = EndpointView(req.model, region, ep.util,
+                                    ep.live_count(), len(ep.pending),
+                                    0.0, pool)
+                acts = cfg.policy.on_request(view, self.now)
+                if acts:
+                    self._apply_actions(acts)
 
     def _apply_actions(self, acts: List[ScaleAction]):
         for act in acts:
@@ -225,22 +258,71 @@ class Simulation:
     def run(self) -> Report:
         cfg = self.cfg
         self._reset_outcomes()
-        for req in self.requests:
-            self._push(req.arrival, Arrival(req))
+        # arrivals stream from a sorted cursor — never materialized on the
+        # heap (at 10M requests the old pre-heaped Arrival events dominated
+        # memory and added a log-factor to every heap operation).  A stable
+        # sort reproduces the old heap's (time, push-seq) order exactly.
+        arrivals = self.requests
+        arr_t = [r.arrival for r in arrivals]
+        if len(arr_t) > 1 and bool(np.any(np.diff(np.asarray(arr_t)) < 0)):
+            arrivals = sorted(arrivals, key=lambda r: r.arrival)
+            arr_t = [r.arrival for r in arrivals]
         self._push(cfg.tick, Tick())
         self._push(3600.0, Hour())
         horizon = self.last_arrival + cfg.drain_grace
 
-        while self._heap:
-            t, _, ev = heapq.heappop(self._heap)
-            if t > horizon and isinstance(ev, CONTROL_EVENTS):
-                if any(not isinstance(e, CONTROL_EVENTS)
-                       for (_, _, e) in self._heap):
-                    pass  # still work in flight; keep ticking
+        # single-subscriber fast paths: dispatch arrivals without
+        # constructing an Arrival event per request, and heap events
+        # without the publish indirection (multi-subscriber event types
+        # fall back to the bus; subscribe before run(), not during)
+        handlers = self.bus.handlers_for(Arrival)
+        direct = (len(handlers) == 1 and handlers[0] == self._on_arrival)
+        dispatch = {}
+        for et in (Retry, PrefillDone, DecodeDone, InstanceReady,
+                   Tick, Hour):
+            hs = self.bus.handlers_for(et)
+            if len(hs) == 1:
+                dispatch[et] = hs[0]
+        dispatch_get = dispatch.get
+
+        heap = self._heap
+        publish = self.bus.publish
+        pop = heapq.heappop
+        i, n = 0, len(arrivals)
+        processed = 0
+        while True:
+            if i < n and (not heap or arr_t[i] <= heap[0][0]):
+                t = arr_t[i]
+                req = arrivals[i]
+                i += 1
+                if t > self.now:
+                    self.now = t
+                processed += 1
+                if direct:
+                    self._arrive(req)
                 else:
+                    publish(Arrival(req))
+                continue
+            if not heap:
+                break
+            t, _, ev = pop(heap)
+            if ev.__class__ in CONTROL_EVENT_SET:
+                # past the horizon control events may not extend the run on
+                # their own: stop once no work events remain (O(1) counter,
+                # the old any() scanned the whole heap per control event)
+                if t > horizon and self._inflight == 0 and i >= n:
                     break
-            self.now = max(self.now, t)
-            self.bus.publish(ev)
+            else:
+                self._inflight -= 1
+            if t > self.now:
+                self.now = t
+            processed += 1
+            h = dispatch_get(ev.__class__)
+            if h is not None:
+                h(ev)
+            else:
+                publish(ev)
+        self.events_processed += processed
 
         self.cluster.accrue(self.now)
         parked = (cfg.queue_manager.depth()
@@ -250,15 +332,26 @@ class Simulation:
                             retry_dropped=self.retry_dropped,
                             parked=parked, slo_ttft=cfg.slo_ttft)
 
+    @staticmethod
+    def _pf_event(inst: Instance) -> PrefillDone:
+        """Per-instance cached PrefillDone: at most one is ever live on
+        the heap per instance (prefill slots are serial), so the event
+        object is reusable."""
+        ev = inst.pf_event
+        if ev is None:
+            ev = inst.pf_event = PrefillDone(inst)
+        return ev
+
     # --------------------------------------------------------- event handlers
-    def _on_arrival(self, ev: Arrival):
-        req: Request = ev.request
+    def _arrive(self, req: Request):
+        self._note_tps(req, req.region)
         if req.tier == TIER_NIW and self.cfg.queue_manager is not None:
-            self._note_tps(req, req.region)
             self.cfg.queue_manager.submit(req)
         else:
-            self._note_tps(req, req.region)
             self._route_and_enqueue(req)
+
+    def _on_arrival(self, ev: Arrival):
+        self._arrive(ev.request)
 
     def _on_retry(self, ev: Retry):
         self._route_and_enqueue(ev.request, attempt=ev.attempt)
@@ -270,19 +363,19 @@ class Simulation:
         req, finish, nxt = inst.on_prefill_done(self.now)
         self._push(finish, DecodeDone(inst, req))
         if nxt:
-            self._push(nxt[1], PrefillDone(inst))
+            self._push(nxt[1], self._pf_event(inst))
 
     def _on_decode_done(self, ev: DecodeDone):
         nxt = ev.instance.on_decode_done(ev.request, self.now)
         if nxt:
-            self._push(nxt[1], PrefillDone(ev.instance))
+            self._push(nxt[1], self._pf_event(ev.instance))
 
     def _on_instance_ready(self, ev: InstanceReady):
         p: PendingInstance = ev.pending
         inst = self.cluster.on_instance_ready(p, self.now)
         started = inst.maybe_start_prefill(self.now)
         if started:
-            self._push(started[1], PrefillDone(inst))
+            self._push(started[1], self._pf_event(inst))
 
     # ----------------------------------------------------------------- ticks
     def _on_tick(self, ev: Tick):
@@ -292,9 +385,9 @@ class Simulation:
         observed = self.observed_tps()
         views = self.cluster.views(observed)
 
-        # backlog signals: published for every policy; ones that don't
-        # care inherit the no-op ``observe``
-        if cfg.queue_manager is not None:
+        # backlog signals: published only to policies that override the
+        # base no-op ``observe``
+        if cfg.queue_manager is not None and self._wants_signals:
             for m in self.models:
                 backlog = cfg.queue_manager.backlog_tokens(m)
                 for r in self.regions:
@@ -306,10 +399,11 @@ class Simulation:
 
         # NIW queue-manager capacity signals (§6.2)
         if cfg.queue_manager is not None:
+            pool = "NIW" if cfg.siloed else "unified"
             for m in self.models:
+                eps = self._region_eps[(m, pool)]
                 for r in self.regions:
-                    pool = "NIW" if cfg.siloed else "unified"
-                    ep = self.cluster.endpoint(m, r, pool)
+                    ep = eps[r]
                     u = ep.util
                     live = ep.live_count()
                     if u < cfg.qm_signal_thresh and live > 0:

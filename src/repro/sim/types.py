@@ -15,7 +15,7 @@ TTFT_SLA = {TIER_IWF: 1.0, TIER_IWN: 60.0}
 NIW_DEADLINE = 24 * 3600.0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
     rid: int
     model: str

@@ -1,0 +1,281 @@
+"""PR-2 hot-path refactor: equivalence, determinism and boundedness.
+
+- the incrementally-accounted simulator must reproduce the pre-refactor
+  (HEAD) Report field-for-field on a pinned trace (tests/golden/);
+- vectorized trace generation must be same-seed deterministic and match
+  the pre-refactor generator's tier mix, per-region volumes and
+  token-length quantiles (RNG draw order changed, so equality is
+  statistical, per the locked anchors below);
+- TPS/history memory must be bounded by the lookback window;
+- tps_series must clip, not crash, on short caller-supplied durations.
+"""
+import json
+import math
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.queue_manager import QueueManager
+from repro.core.scaling import make_policy
+from repro.sim.events import Tick
+from repro.sim.metrics import report_to_dict
+from repro.sim.simulator import SimConfig, Simulation
+from repro.sim.tps import TpsHistory
+from repro.sim.types import Request
+from repro.sim.workload import (Trace, WorkloadSpec, generate,
+                                generate_trace, replay_csv, tps_series)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+# pre-refactor (HEAD) statistics for WorkloadSpec(days=1.0, scale=0.02,
+# seed=0), recorded before the vectorization change
+HEAD_ANCHORS = {
+    "total": 99163,
+    "tiers": {"IW-F": 56546, "IW-N": 30210, "NIW": 12407},
+    "regions": {"westus": 24130, "centralus": 32034, "eastus": 42999},
+    "prompt_q": {50: 1341.0, 90: 4851.0},
+    "output_q": {50: 180.0, 90: 572.0},
+}
+
+
+def _golden_cfg():
+    return SimConfig(policy=make_policy("reactive"),
+                     queue_manager=QueueManager(),
+                     initial_instances=3, spot_spare=8,
+                     drain_grace=3 * 3600.0)
+
+
+@pytest.fixture(scope="module")
+def golden_trace():
+    return replay_csv(str(GOLDEN / "trace_small.csv.gz"))
+
+
+# ---------------------------------------------------------------- simulator
+def _compare(path, a, b, errs):
+    if isinstance(b, dict):
+        if not isinstance(a, dict) or set(a) != set(b):
+            errs.append(f"{path}: key mismatch")
+            return
+        for k, v in b.items():
+            _compare(f"{path}.{k}", a[k], v, errs)
+    elif isinstance(b, list):
+        if len(a) != len(b):
+            errs.append(f"{path}: length {len(a)} != {len(b)}")
+            return
+        for i, (x, y) in enumerate(zip(a, b)):
+            _compare(f"{path}[{i}]", x, y, errs)
+    elif isinstance(b, float) and isinstance(a, (int, float)):
+        if not math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-9):
+            errs.append(f"{path}: {a} != {b}")
+    elif a != b:
+        errs.append(f"{path}: {a!r} != {b!r}")
+
+
+def test_report_matches_head_golden(golden_trace):
+    """Field-for-field equivalence with the pre-refactor simulator on the
+    pinned trace + stack (tests/golden/report_small.json was produced by
+    HEAD before the incremental-accounting change)."""
+    rep = Simulation(golden_trace, _golden_cfg(), name="golden").run()
+    new = report_to_dict(rep)
+    gold = json.loads((GOLDEN / "report_small.json").read_text())
+    errs = []
+    _compare("report", new, gold, errs)
+    assert not errs, errs[:10]
+
+
+def test_incremental_aggregates_match_scans_during_run(golden_trace):
+    """Endpoint O(1) aggregates (util sum, live count, JSQ heap top) must
+    equal brute-force scans throughout the run, not just at the end —
+    checked from an extra Tick subscriber (which also exercises the
+    multi-handler dispatch path of the hot loop)."""
+    trace = [r for r in golden_trace if r.arrival < 3600.0]
+    sim = Simulation(trace, _golden_cfg(), name="scan")
+    checks = []
+
+    def check(_ev):
+        for ep in sim.cluster.endpoints.values():
+            ep.scan_check()
+        checks.append(1)
+
+    sim.bus.subscribe(Tick, check)
+    sim.run()
+    assert len(checks) > 50
+    assert sim._inflight == 0     # drain counter fully consumed
+
+
+def test_events_processed_counted(golden_trace):
+    sim = Simulation(golden_trace, _golden_cfg(), name="ev")
+    sim.run()
+    # every request contributes >= 2 events (prefill + decode done)
+    assert sim.events_processed > 2 * len(golden_trace)
+
+
+# ----------------------------------------------------------------- workload
+def test_same_seed_generation_is_deterministic():
+    a = generate_trace(WorkloadSpec(days=0.05, scale=0.02, seed=11))
+    b = generate_trace(WorkloadSpec(days=0.05, scale=0.02, seed=11))
+    for f in ("rid", "model_idx", "region_idx", "tier_idx", "arrival",
+              "prompt_tokens", "output_tokens", "ttft_deadline",
+              "deadline"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    c = generate_trace(WorkloadSpec(days=0.05, scale=0.02, seed=12))
+    assert not np.array_equal(a.arrival, c.arrival)
+
+
+def test_trace_to_requests_bridge_consistent():
+    tr = generate_trace(WorkloadSpec(days=0.05, scale=0.02, seed=3))
+    reqs = tr.to_requests()
+    assert len(reqs) == len(tr)
+    assert all(b.arrival >= a.arrival for a, b in zip(reqs, reqs[1:]))
+    for i in (0, len(reqs) // 2, len(reqs) - 1):
+        r = reqs[i]
+        assert r.model == tr.models[tr.model_idx[i]]
+        assert r.region == tr.regions[tr.region_idx[i]]
+        assert r.tier == tr.tiers[tr.tier_idx[i]]
+        assert r.arrival == tr.arrival[i]
+        assert r.prompt_tokens == tr.prompt_tokens[i]
+        assert r.rid == tr.rid[i]
+
+
+def test_vectorized_generate_locks_head_statistics():
+    """RNG draw order changed with vectorization; tier mix, per-region
+    volumes and token-length quantiles stay locked to the pre-refactor
+    generator (sampling noise for two independent Poisson realizations
+    of ~1e5 requests is ~0.5%, so 2% count / 1.5% quantile gates)."""
+    reqs = generate(WorkloadSpec(days=1.0, scale=0.02, seed=0))
+    total = len(reqs)
+    assert math.isclose(total, HEAD_ANCHORS["total"], rel_tol=0.02)
+    tiers = {t: sum(1 for r in reqs if r.tier == t)
+             for t in ("IW-F", "IW-N", "NIW")}
+    for t, want in HEAD_ANCHORS["tiers"].items():
+        assert math.isclose(tiers[t] / total,
+                            want / HEAD_ANCHORS["total"], abs_tol=0.01), t
+    regions = {}
+    for r in reqs:
+        regions[r.region] = regions.get(r.region, 0) + 1
+    for rg, want in HEAD_ANCHORS["regions"].items():
+        assert math.isclose(regions[rg], want, rel_tol=0.02), rg
+    p = np.array([r.prompt_tokens for r in reqs])
+    o = np.array([r.output_tokens for r in reqs])
+    for q, want in HEAD_ANCHORS["prompt_q"].items():
+        assert math.isclose(float(np.percentile(p, q)), want,
+                            rel_tol=0.015), f"prompt p{q}"
+    for q, want in HEAD_ANCHORS["output_q"].items():
+        assert math.isclose(float(np.percentile(o, q)), want,
+                            rel_tol=0.015), f"output p{q}"
+
+
+def test_tps_series_clips_short_duration():
+    """Regression: a caller-supplied duration shorter than the trace used
+    to IndexError; arrivals past it now land in the final bucket."""
+    reqs = [Request(i, "m", "r", "IW-F", float(t), 100, 10,
+                    t + 1.0, t + 60.0) for i, t in enumerate(
+                        [0.0, 30.0, 200.0, 500.0])]
+    s = tps_series(reqs, window=60.0, duration=120.0)
+    arr = s[("m", "r")]
+    assert arr.shape == (3,)
+    # buckets: [0,60): two reqs; [60,120): none; final: clipped tail
+    assert arr[0] == pytest.approx(200 / 60.0)
+    assert arr[1] == 0.0
+    assert arr[2] == pytest.approx(200 / 60.0)
+    # columnar path agrees
+    tr = generate_trace(WorkloadSpec(days=0.05, scale=0.02, seed=5))
+    dur = float(tr.arrival.max()) / 2
+    obj = tps_series(tr.to_requests(), duration=dur)
+    col = tps_series(tr, duration=dur)
+    assert set(obj) == set(col)
+    for k in obj:
+        np.testing.assert_allclose(obj[k], col[k], rtol=1e-12)
+
+
+def test_tps_series_trace_matches_requests_full():
+    tr = generate_trace(WorkloadSpec(days=0.05, scale=0.02, seed=6))
+    obj = tps_series(tr.to_requests())
+    col = tps_series(tr)
+    assert set(obj) == set(col)
+    for k in obj:
+        np.testing.assert_allclose(obj[k], col[k], rtol=1e-12)
+
+
+def test_replay_csv_reads_gzip(golden_trace):
+    assert len(golden_trace) > 1000
+    r = golden_trace[0]
+    assert isinstance(r.rid, int) and isinstance(r.prompt_tokens, int)
+    assert all(b.arrival >= a.arrival
+               for a, b in zip(golden_trace[:100], golden_trace[1:101]))
+
+
+# -------------------------------------------------------------- TPS history
+def test_tps_history_matches_dict_reference():
+    rng = np.random.default_rng(0)
+    keys = [("m", "a"), ("m", "b")]
+    hist = TpsHistory(keys, window=60.0, lookback=86400.0)
+    ref = {k: {} for k in keys}
+    t = 0.0
+    for _ in range(3000):
+        t += float(rng.exponential(5.0))
+        k = keys[int(rng.integers(2))]
+        v = float(rng.uniform(0.1, 10.0))
+        hist.note(k, t, v)
+        b = int(t / 60.0)
+        ref[k][b] = ref[k].get(b, 0.0) + v
+    b_hi = int(t / 60.0)
+    # observed_tps convention: mean over (b-n, b]
+    got = hist.window_mean(t, 300.0, include_current=True)
+    for k in keys:
+        want = sum(ref[k].get(b, 0.0)
+                   for b in range(b_hi - 4, b_hi + 1)) / 5
+        assert got[k] == pytest.approx(want, abs=1e-12)
+    # niw_last_hour convention: mean over [b-n, b)
+    got = hist.window_mean(t, 3600.0, include_current=False)
+    for k in keys:
+        want = sum(ref[k].get(b, 0.0)
+                   for b in range(b_hi - 60, b_hi)) / 60
+        assert got[k] == pytest.approx(want, abs=1e-12)
+    # series convention: buckets [0, b_hi)
+    got = hist.series(t)
+    for k in keys:
+        want = np.array([ref[k].get(b, 0.0) for b in range(b_hi)])
+        np.testing.assert_allclose(got[k], want, atol=1e-12)
+
+
+def test_tps_history_memory_bounded_by_lookback():
+    keys = [("m", "r")]
+    hist = TpsHistory(keys, window=60.0, lookback=3600.0)
+    cap0 = hist.memory_buckets()
+    assert cap0 == hist.capacity == 60
+    # simulate ten days of arrivals: memory must not grow
+    t = 0.0
+    for _ in range(20000):
+        t += 43.2
+        hist.note(("m", "r"), t, 1.0)
+    assert hist.memory_buckets() == cap0
+    assert len(hist.series(t)[("m", "r")]) <= hist.capacity
+
+
+def test_simulation_history_bounded_by_lookback():
+    """A run much longer than the lookback keeps O(window) bucket memory
+    and a clipped history_series."""
+    trace = generate(WorkloadSpec(days=0.4, scale=0.005, seed=9))
+    cfg = _golden_cfg()
+    cfg.history_lookback = 2 * 3600.0
+    sim = Simulation(trace, cfg, name="bounded")
+    before = sim.tps.memory_buckets() + sim.niw_tps.memory_buckets()
+    sim.run()
+    after = sim.tps.memory_buckets() + sim.niw_tps.memory_buckets()
+    assert before == after                      # no per-run growth
+    assert sim.tps.capacity == 120              # 7200s / 60s buckets
+    series = sim.history_series()
+    # sim time ~0.4d + 3h drain >> lookback: series is clipped to the ring
+    assert all(len(v) <= sim.tps.capacity for v in series.values())
+    assert sim.now > 4 * 7200.0
+
+
+def test_default_lookback_preserves_full_history():
+    trace = generate(WorkloadSpec(days=0.1, scale=0.01, seed=10))
+    sim = Simulation(trace, _golden_cfg(), name="full-hist")
+    sim.run()
+    series = sim.history_series()
+    want = int(sim.now / 60.0)
+    assert all(len(v) == want for v in series.values())
