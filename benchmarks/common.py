@@ -15,14 +15,18 @@ import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.api import PolicySpec, StackSpec, build_stack
+from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR
 from repro.sim.metrics import Report
 from repro.sim.perfmodel import PerfProfile
 from repro.sim.workload import PAPER_MODELS, REGIONS, WorkloadSpec, generate
 
-DOLLARS_PER_HOUR = 98.32     # paper §7.2.1
+DOLLARS_PER_HOUR = DEFAULT_DOLLARS_PER_HOUR     # paper §7.2.1
 THETA_HEADROOM = 0.7         # ILP capacity derating (keeps tail latency)
 
-STRATEGIES = ("siloed", "reactive", "lt-i", "lt-u", "lt-ua", "chiron")
+# "lt-ua+plan" is the fully co-optimized stack: LT-UA scaling plus the
+# routing-aware ILP whose ω fractions drive a PlanAwareRouter.
+STRATEGIES = ("siloed", "reactive", "lt-i", "lt-u", "lt-ua",
+              "lt-ua+plan", "chiron")
 
 
 @dataclasses.dataclass
@@ -45,10 +49,12 @@ def make_trace(spec: BenchSpec):
         burst_hours=spec.burst_hours))
 
 
-def planner_spec(fit_steps: int = 150) -> PolicySpec:
-    return PolicySpec("sageserve", {"min_instances": 2, "epsilon": 0.8,
-                                    "fit_steps": fit_steps,
-                                    "theta_headroom": THETA_HEADROOM})
+def planner_spec(fit_steps: int = 150, routing: bool = False) -> PolicySpec:
+    kw = {"min_instances": 2, "epsilon": 0.8, "fit_steps": fit_steps,
+          "theta_headroom": THETA_HEADROOM}
+    if routing:
+        kw["use_routing"] = True
+    return PolicySpec("sageserve", kw)
 
 
 def stack_spec(spec: BenchSpec, strategy: str,
@@ -70,6 +76,10 @@ def stack_spec(spec: BenchSpec, strategy: str,
                 "init_mixed": 1, "init_batch": 1}),
             initial_instances=None,   # Chiron sizes its own pools
             **common)
+    if strategy == "lt-ua+plan":
+        return StackSpec(scaler="lt-ua", planner=planner_spec(routing=True),
+                         router="plan",
+                         initial_instances=spec.initial_instances, **common)
     if strategy not in ("reactive", "lt-i", "lt-u", "lt-ua"):
         raise KeyError(f"unknown strategy {strategy!r}; "
                        f"known: {', '.join(STRATEGIES)}")

@@ -87,6 +87,65 @@ def time_generation(days: float, scale: float, seed: int = 0) -> dict:
     }
 
 
+def time_control(fit_steps: int = 150, history_days: float = 2.0) -> dict:
+    """Control-plane probe: one hourly plan (batched forecast + ILP) on
+    the 3-region × 4-model stack over two days of 60 s TPS history.
+
+    Times the batched engine cold (includes the JIT trace), warm
+    (steady-state hourly cost, parameters warm-started) and the serial
+    per-series reference, plus the myopic and routing-aware ILPs —
+    recorded in BENCH_sim.json so forecast-engine regressions are
+    tracked like simulator throughput.
+    """
+    import numpy as np
+    from repro.api import PolicySpec, resolve
+    from repro.api.stack import BuildContext
+    from repro.sim.perfmodel import PROFILES
+    from repro.sim.workload import PAPER_MODELS, REGIONS
+
+    ctx = BuildContext(tuple(PAPER_MODELS), tuple(REGIONS),
+                       {m: PROFILES[m] for m in PAPER_MODELS})
+    n_buckets = int(history_days * 1440)
+    rng = np.random.default_rng(0)
+    t = np.arange(n_buckets, dtype=float)
+    history = {}
+    for i, m in enumerate(PAPER_MODELS):
+        for j, r in enumerate(REGIONS):
+            history[(m, r)] = (1000 + 400 * np.sin(
+                2 * np.pi * t / 1440 - i - j)
+                + rng.normal(0, 30, t.shape)).clip(min=0)
+    instances = {k: 5 for k in history}
+    niw = {k: 50.0 for k in history}
+
+    def plan_once(use_routing, batched):
+        ctl = resolve("planner", PolicySpec(
+            "sageserve", {"fit_steps": fit_steps, "batched": batched,
+                          "use_routing": use_routing}), ctx)
+        t0 = time.perf_counter()
+        ctl.plan(3600.0, instances, history, niw)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ctl.plan(7200.0, instances, history, niw)
+        warm = time.perf_counter() - t0
+        ilp = ctl.solve_history[-1]["ilp_s"]
+        return cold, warm, ilp
+
+    cold_b, warm_b, ilp_myopic = plan_once(False, batched=True)
+    cold_s, warm_s, _ = plan_once(False, batched=False)
+    _, _, ilp_routing = plan_once(True, batched=True)
+    return {
+        "stack": f"{len(REGIONS)}regions_x_{len(PAPER_MODELS)}models",
+        "history_buckets": n_buckets,
+        "fit_steps": fit_steps,
+        "plan_batched_cold_s": round(cold_b, 3),
+        "plan_batched_warm_s": round(warm_b, 3),
+        "plan_serial_s": round(warm_s, 3),
+        "forecast_speedup_vs_serial": round(warm_s / max(warm_b, 1e-9), 2),
+        "ilp_s": round(ilp_myopic, 4),
+        "ilp_routing_s": round(ilp_routing, 4),
+    }
+
+
 def time_simulation(reqs, stack_spec, name: str, repeats: int = 3) -> dict:
     """Best-of-N simulation wall-clock + events/sec on a built stack."""
     from repro.api import build_stack
@@ -139,6 +198,12 @@ def bench(full: bool = False, repeats: int = 3, out: str = None,
         result[name] = r
         csv_line(f"perf.{name}.events_per_s", r["events_per_s"],
                  f"{r['wall_s_best']}s best of {repeats}")
+
+    ctl = time_control()
+    result["control"] = ctl
+    csv_line("perf.control.plan_batched_warm_s",
+             ctl["plan_batched_warm_s"],
+             f"{ctl['forecast_speedup_vs_serial']}x vs serial")
 
     if full:
         gen_f = time_generation(REFERENCE_DAYS, 1.0)
@@ -206,6 +271,30 @@ def smoke() -> int:
     return 0
 
 
+def control_probe(fit_steps: int = 100) -> int:
+    """CI probe for scripts/check.sh: one hourly plan on the paper
+    stack; fails if the batched engine lost to the serial path or the
+    ILP stalled."""
+    from benchmarks.common import csv_line
+    print("name,value,derived", flush=True)
+    ctl = time_control(fit_steps=fit_steps)
+    for k in ("plan_batched_cold_s", "plan_batched_warm_s",
+              "plan_serial_s", "ilp_s", "ilp_routing_s"):
+        csv_line(f"control.{k}", ctl[k])
+    csv_line("control.forecast_speedup_vs_serial",
+             ctl["forecast_speedup_vs_serial"])
+    if ctl["forecast_speedup_vs_serial"] < 1.0:
+        print("FAILED control probe: batched hourly plan slower than "
+              "serial", file=sys.stderr)
+        return 1
+    if ctl["ilp_routing_s"] > 30.0:
+        print("FAILED control probe: routing ILP implausibly slow",
+              file=sys.stderr)
+        return 1
+    print("# control probe ok", flush=True)
+    return 0
+
+
 def run(quick: bool = False):
     """benchmarks.run entry point."""
     return bench(full=False, repeats=1 if quick else 3)
@@ -214,6 +303,9 @@ def run(quick: bool = False):
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--control", action="store_true",
+                    help="run only the control-plane probe (one hourly "
+                         "plan: batched forecast + ILP)")
     ap.add_argument("--full", action="store_true",
                     help="include the scale=1.0 (~4.9M request) run")
     ap.add_argument("--repeats", type=int, default=3)
@@ -224,6 +316,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.smoke:
         return smoke()
+    if args.control:
+        return control_probe()
     print("name,value,derived", flush=True)
     bench(full=args.full, repeats=args.repeats, out=args.out,
           baseline_path=args.baseline, fleet_floor=args.fleet_floor)

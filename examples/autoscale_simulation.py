@@ -1,5 +1,6 @@
 """Full strategy shoot-out on a peak day: Siloed / Reactive / LT-I / LT-U /
-LT-UA / Chiron — reproduces the shape of Fig. 8 + Fig. 11 of the paper.
+LT-UA / LT-UA+plan-routing / Chiron — reproduces the shape of Fig. 8 +
+Fig. 11 of the paper, with dollar-cost columns (α = $98.32/h, §7.2.1).
 
     PYTHONPATH=src python examples/autoscale_simulation.py [--scale 0.15]
 """
@@ -29,12 +30,18 @@ def main():
         reports[strat] = run_strategy(trace, spec, strat)
         print(reports[strat].summary())
         print()
-    base = reports["reactive"].total_instance_hours()
-    print("=== instance-hours vs Unified Reactive ===")
+    base = reports["reactive"]
+    base_h = base.total_instance_hours()
+    print("=== instance-hours & dollars vs Unified Reactive ===")
+    print(f"  {'strategy':10s} {'inst-h':>9s} {'gpu-$':>11s} "
+          f"{'wasted-$':>9s} {'savings':>14s}")
     for strat, rep in reports.items():
-        d = 100 * (1 - rep.total_instance_hours() / base)
-        print(f"  {strat:9s} {rep.total_instance_hours():8.1f} h "
-              f"({d:+.1f}% vs reactive)")
+        d = 100 * (1 - rep.total_instance_hours() / base_h)
+        sav = rep.savings_vs(base)
+        print(f"  {strat:10s} {rep.total_instance_hours():8.1f}h "
+              f"${rep.total_gpu_dollars():10,.0f} "
+              f"${rep.total_wasted_dollars():8,.0f} "
+              f"${sav['dollars']:9,.0f} ({d:+.1f}%)")
 
 
 if __name__ == "__main__":

@@ -40,8 +40,10 @@ def main():
                  / base.total_instance_hours())
     waste = 100 * (1 - ours.total_wasted_hours()
                    / max(base.total_wasted_hours(), 1e-9))
+    dollars = ours.savings_vs(base)
     print(f"\nSageServe LT-UA vs Reactive: {sav:.1f}% fewer instance-hours, "
-          f"{waste:.1f}% less GPU time wasted on scaling")
+          f"{waste:.1f}% less GPU time wasted on scaling, "
+          f"${dollars['dollars']:,.0f} saved ({dollars['pct']:.1f}%)")
 
 
 if __name__ == "__main__":

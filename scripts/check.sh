@@ -22,4 +22,7 @@ python -m benchmarks.run --smoke
 echo "== perf smoke (simulator hot path, events/sec) =="
 python -m benchmarks.perf_sim --smoke
 
+echo "== control probe (one hourly plan: batched forecast + ILP) =="
+python -m benchmarks.perf_sim --control
+
 echo "== check.sh OK =="

@@ -6,6 +6,7 @@ import them to register components); the stack builder — which imports
 the simulator and the core built-ins — loads lazily on first access of
 ``build_stack`` / ``ServingStack`` / ``simulate``.
 """
+from repro.api.plan import Plan, RoutingPlan
 from repro.api.protocols import (Forecaster, GlobalPlanner, QueuePolicy,
                                  RequestLike, Router, Scaler, Scheduler)
 from repro.api.registry import known, register, resolve
@@ -16,10 +17,10 @@ _LAZY = ("BuildContext", "ServingStack", "build_stack", "simulate")
 
 __all__ = [
     "BacklogSignal", "BuildContext", "Forecaster", "GlobalPlanner",
-    "PolicySpec", "QueuePolicy", "RequestLike", "Router", "Scaler",
-    "Scheduler", "ServingStack", "Signal", "StackSpec",
-    "UtilizationSignal", "build_stack", "known", "register", "resolve",
-    "simulate",
+    "Plan", "PolicySpec", "QueuePolicy", "RequestLike", "Router",
+    "RoutingPlan", "Scaler", "Scheduler", "ServingStack", "Signal",
+    "StackSpec", "UtilizationSignal", "build_stack", "known", "register",
+    "resolve", "simulate",
 ]
 
 

@@ -1,0 +1,79 @@
+"""The hourly control-plane ``Plan``: one object co-optimizing scaling
+and cross-region routing (paper §5–§6).
+
+A ``GlobalPlanner`` emits a ``Plan`` every hour: per-(model, region)
+instance **targets** (the ILP's n+δ), the peak **forecasts** they were
+derived from, an optional ``RoutingPlan`` of cross-region traffic
+fractions (the ILP's spill variables ω), and the solver's objective in
+dollars.  Scalers actuate the targets at their own pace; a plan-aware
+router splits traffic by the fractions until the plan goes stale.
+
+Plain data — no JAX, no simulator imports — so every layer (api, sim,
+benchmarks, live serving) can pass plans around freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+Key = Tuple[str, str]  # (model, region)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPlan:
+    """Cross-region traffic split: ``fractions[(model, home_region)]``
+    maps each serving region to the fraction of the home region's
+    demand it should absorb (ω_{i,j→j'} in the §5 ILP extension).
+    Fractions per key are non-negative and sum to 1."""
+
+    fractions: Dict[Key, Dict[str, float]]
+
+    def cumulative(self, key: Key) -> Optional[List[Tuple[float, str]]]:
+        """Cumulative split points for hash-based routing: a sorted list
+        of (cum_fraction, region), home region first so that sub-ε
+        hash values always stay home."""
+        fr = self.fractions.get(key)
+        if not fr:
+            return None
+        home = key[1]
+        order = sorted(fr, key=lambda rg: (rg != home, rg))
+        out, cum = [], 0.0
+        for rg in order:
+            f = fr[rg]
+            if f <= 0.0:
+                continue
+            cum += f
+            out.append((cum, rg))
+        if not out:
+            return None
+        # guard against float drift: the last split point covers 1.0
+        last_cum, last_rg = out[-1]
+        out[-1] = (max(last_cum, 1.0), last_rg)
+        return out
+
+    def validate(self, tol: float = 1e-6) -> None:
+        for key, fr in self.fractions.items():
+            total = sum(fr.values())
+            if any(f < -tol for f in fr.values()):
+                raise ValueError(f"RoutingPlan[{key}]: negative fraction")
+            if abs(total - 1.0) > 1e-3:
+                raise ValueError(
+                    f"RoutingPlan[{key}]: fractions sum to {total}, not 1")
+
+
+@dataclasses.dataclass
+class Plan:
+    """One hourly control decision: scaling targets + routing split."""
+
+    t: float                                  # plan creation time (sim s)
+    targets: Dict[Key, int]                   # ILP n+δ per (model, region)
+    forecasts: Dict[Key, float]               # peak TPS the ILP planned for
+    routing: Optional[RoutingPlan] = None     # None → router's own policy
+    horizon: float = 3600.0                   # validity window (s)
+    cost_estimate: float = 0.0                # ILP objective ($)
+    status: str = ""                          # ILP solver status
+
+    def stale(self, now: float, slack: float = 2.0) -> bool:
+        """A plan past ``slack`` horizons is stale: consumers must fall
+        back to their myopic policies rather than act on old targets."""
+        return now > self.t + slack * self.horizon

@@ -13,6 +13,7 @@ from typing import (Dict, List, Mapping, Optional, Protocol, Sequence,
 
 import numpy as np
 
+from repro.api.plan import Plan
 from repro.api.signals import Signal
 
 Key = Tuple[str, str]  # (model, region)
@@ -100,10 +101,13 @@ class Forecaster(Protocol):
 
 @runtime_checkable
 class GlobalPlanner(Protocol):
-    """Hourly global planner (§5–§6.3): forecast + ILP → per-(model,
-    region) instance targets that the Scaler actuates at its own pace."""
+    """Hourly global planner (§5–§6.3): forecast + ILP → one ``Plan``
+    of per-(model, region) instance targets (actuated by the Scaler at
+    its own pace) plus optional cross-region routing fractions
+    (consumed by a plan-aware Router).  Legacy planners returning a
+    bare ``(targets, forecasts)`` tuple are still accepted by the
+    simulator's hourly adapter."""
 
     def plan(self, now: float, instances: Dict[Key, int],
              history: Dict[Key, np.ndarray],
-             niw_last_hour_tps: Dict[Key, float]
-             ) -> Tuple[Dict[Key, int], Dict[Key, float]]: ...
+             niw_last_hour_tps: Dict[Key, float]) -> Plan: ...

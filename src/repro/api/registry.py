@@ -30,13 +30,13 @@ _REGISTRY: Dict[str, Dict[str, Callable]] = {k: {} for k in KINDS}
 
 # Modules whose import registers the built-in components of each kind.
 _BUILTIN_MODULES = (
-    "repro.core.routing",
+    "repro.control.routing",
     "repro.core.scaling",
     "repro.core.chiron",
-    "repro.core.forecast",
+    "repro.control.forecast",
     "repro.core.scheduling",
     "repro.core.queue_manager",
-    "repro.core.controller",
+    "repro.control.planner",
 )
 _builtins_loaded = False
 

@@ -19,6 +19,7 @@ import dataclasses
 from typing import Dict, Mapping, Optional, Tuple, Union
 
 from repro.api import registry
+from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR
 from repro.sim.types import TTFT_SLA
 
 SpecLike = Union[None, str, "PolicySpec", Mapping, Tuple[str, Mapping]]
@@ -88,6 +89,12 @@ class StackSpec:
     qm_signal_thresh: float = 0.6
     tps_window: float = 60.0
     drain_grace: float = 6 * 3600.0
+    history_lookback: float = 8 * 86400.0   # TPS history retention (s)
+
+    # dollar accounting (paper §7.2.1: α = $98.32/h per serving VM);
+    # cost_rates overrides per model (a proxy for its GPU type / VM SKU)
+    cost_alpha: float = DEFAULT_DOLLARS_PER_HOUR
+    cost_rates: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     # retry/backoff when an endpoint has zero live instances
     retry_base: float = 5.0
@@ -122,9 +129,14 @@ class StackSpec:
         if (self.initial_instances is not None
                 and self.initial_instances <= 0):
             raise ValueError("initial_instances must be positive")
-        for knob in ("tick", "sample_every", "tps_window", "retry_base"):
+        for knob in ("tick", "sample_every", "tps_window", "retry_base",
+                     "history_lookback", "cost_alpha"):
             if getattr(self, knob) <= 0:
                 raise ValueError(f"StackSpec.{knob} must be positive")
+        for model, rate in self.cost_rates.items():
+            if rate <= 0:
+                raise ValueError(
+                    f"cost_rates[{model!r}] must be positive")
         if not 0.0 < self.qm_signal_thresh <= 1.0:
             raise ValueError("qm_signal_thresh must be in (0, 1]")
         for tier, sla in self.slo_ttft.items():

@@ -22,6 +22,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.api.registry import resolve
 from repro.api.spec import StackSpec
+from repro.control.cost import CostModel
 from repro.sim.metrics import Report
 from repro.sim.perfmodel import PROFILES, PerfProfile
 from repro.sim.simulator import SimConfig, Simulation
@@ -35,6 +36,11 @@ class BuildContext:
     models: Tuple[str, ...]
     regions: Tuple[str, ...]
     profiles: Dict[str, PerfProfile]
+    # control-loop knobs factories may key defaults off (e.g. the
+    # sageserve planner's seasonal period spans one day of tps_window
+    # buckets, capped by what the history lookback actually retains)
+    tps_window: float = 60.0
+    history_lookback: float = 8 * 86400.0
 
 
 @dataclasses.dataclass
@@ -77,6 +83,9 @@ class ServingStack:
             retry_cap=spec.retry_cap,
             max_retries=spec.max_retries,
             slo_ttft=dict(spec.slo_ttft),
+            history_lookback=spec.history_lookback,
+            cost_model=CostModel(alpha=spec.cost_alpha,
+                                 rates=dict(spec.cost_rates)),
         )
 
     def simulate(self, trace: Sequence[Request], name: str = "sim"
@@ -96,7 +105,8 @@ def build_stack(spec: StackSpec,
     spec.validate()
     profiles = profiles or {m: PROFILES[m] for m in spec.models}
     ctx = BuildContext(tuple(spec.models), tuple(spec.regions),
-                       dict(profiles))
+                       dict(profiles), tps_window=spec.tps_window,
+                       history_lookback=spec.history_lookback)
     return ServingStack(
         spec=spec,
         scaler=resolve("scaler", spec.scaler, ctx),

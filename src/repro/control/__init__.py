@@ -1,0 +1,37 @@
+"""``repro.control`` — the unified hourly control plane (paper §5–§6).
+
+One package for everything the hourly loop co-optimizes:
+
+- :mod:`repro.control.forecast` — ARIMA fitting (serial
+  ``ARIMAForecaster`` + the ``jax.vmap``-batched, warm-started
+  ``BatchForecastEngine``);
+- :mod:`repro.control.ilp` — the MILP solver (HiGHS backend + own B&B);
+- :mod:`repro.control.provision` — the §5 provisioning program, with
+  the ω spill-fraction extension for routing-aware plans;
+- :mod:`repro.control.routing` — global region routing
+  (``ThresholdRouter``) and the plan-driven ``PlanAwareRouter``;
+- :mod:`repro.control.cost` — dollar accounting (``CostModel``);
+- :mod:`repro.control.planner` — ``SageServeController``, whose hourly
+  output is a single :class:`repro.api.plan.Plan`.
+
+The old ``repro.core.{forecast,ilp,provisioner,routing,controller}``
+module paths remain as import shims.  See docs/CONTROL.md.
+"""
+from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR, CostModel
+from repro.control.forecast import (ARIMAForecaster, BatchForecastEngine,
+                                    select_order)
+from repro.control.ilp import ILPResult, solve_ilp
+from repro.control.planner import ControllerConfig, SageServeController
+from repro.control.provision import (ProvisionProblem, ProvisionSolution,
+                                     solve, solve_with_routing)
+from repro.control.routing import (PlanAwareRouter, ThresholdRouter,
+                                   pick_endpoint, route_global, route_jsq)
+
+__all__ = [
+    "ARIMAForecaster", "BatchForecastEngine", "ControllerConfig",
+    "CostModel", "DEFAULT_DOLLARS_PER_HOUR", "ILPResult",
+    "PlanAwareRouter", "ProvisionProblem", "ProvisionSolution",
+    "SageServeController", "ThresholdRouter", "pick_endpoint",
+    "route_global", "route_jsq", "select_order", "solve", "solve_ilp",
+    "solve_with_routing",
+]

@@ -1,0 +1,337 @@
+"""ARIMA traffic forecasting, fit with JAX (CSS objective, Adam).
+
+The paper forecasts next-hour input TPS per (model, region) with ARIMA
+and selects hyper-parameters by AIC (§6.3, §7.1).  We implement
+ARIMA(p, d, q) with optional seasonal differencing: the series is
+differenced ``d`` times (+ one seasonal difference of period ``s`` when
+``seasonal_period`` is set), then an ARMA(p, q) is fit by conditional
+sum-of-squares — the residual recursion runs under ``jax.lax.scan`` and
+the parameters are optimized with ``jax.grad`` + Adam.  Forecasting
+recurses the fitted ARMA forward and integrates the differences back.
+
+Two fitting paths share the same math:
+
+- ``ARIMAForecaster`` — one series per object, the original serial path.
+- ``BatchForecastEngine`` — the hourly controller's engine: all
+  (model, region) series of one length are stacked into a ``(S, L)``
+  array and fit by a single ``jax.vmap``'d Adam scan (one JIT trace and
+  one device dispatch instead of S serial 400-step fits), with
+  warm-started parameters carried fit-to-fit.  Ragged histories fall
+  back to smaller per-length batches, and series too short to fit are
+  left to the caller's persistence fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Key = Tuple[str, str]
+
+
+@functools.partial(jax.jit, static_argnames=("p", "q"))
+def _css_residuals(params, y, p: int, q: int):
+    """Conditional-sum-of-squares residuals of ARMA(p, q)."""
+    c, phi, theta = params["c"], params["phi"], params["theta"]
+    k = max(p, q, 1)
+    ypad = jnp.concatenate([jnp.zeros((k,), y.dtype), y])
+    epad0 = jnp.zeros((k,), y.dtype)
+
+    def step(carry, t):
+        e_hist = carry  # last k residuals, most recent first
+        y_lags = jax.lax.dynamic_slice(ypad, (t,), (k,))[::-1]
+        ar = jnp.dot(phi, y_lags[:p]) if p else 0.0
+        ma = jnp.dot(theta, e_hist[:q]) if q else 0.0
+        pred = c + ar + ma
+        e = ypad[t + k] - pred
+        e_hist = jnp.concatenate([e[None], e_hist[:-1]])
+        return e_hist, e
+
+    _, resid = jax.lax.scan(step, epad0, jnp.arange(y.shape[0]))
+    return resid
+
+
+def zero_params(p: int, q: int) -> dict:
+    return {"c": jnp.zeros(()), "phi": jnp.zeros((p,)),
+            "theta": jnp.zeros((q,))}
+
+
+def _fit_arma_core(y, init, p: int, q: int, steps: int, lr: float):
+    """One CSS/Adam fit from ``init`` — traced under jit and vmap."""
+
+    def loss_fn(prm):
+        e = _css_residuals(prm, y, p, q)
+        return jnp.mean(jnp.square(e))
+
+    grad_fn = jax.value_and_grad(loss_fn)
+    # Adam
+    m = jax.tree.map(jnp.zeros_like, init)
+    v = jax.tree.map(jnp.zeros_like, init)
+
+    def opt_step(carry, i):
+        prm, m, v = carry
+        loss, g = grad_fn(prm)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        prm = jax.tree.map(lambda pp, a, b: pp - lr * a /
+                           (jnp.sqrt(b) + 1e-8), prm, mh, vh)
+        return (prm, m, v), loss
+
+    (params, _, _), losses = jax.lax.scan(
+        opt_step, (init, m, v), jnp.arange(steps, dtype=jnp.float32))
+    return params, losses[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("p", "q", "steps"))
+def _fit_arma(y, p: int, q: int, steps: int = 400, lr: float = 0.05):
+    return _fit_arma_core(y, zero_params(p, q), p, q, steps, lr)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "q", "steps"))
+def _fit_arma_batch(y, init, p: int, q: int, steps: int = 400,
+                    lr: float = 0.05):
+    """vmap'd fit: ``y`` is (S, L), ``init`` a param pytree with a
+    leading S axis.  One trace + one dispatch for the whole stack."""
+    return jax.vmap(
+        lambda yy, ii: _fit_arma_core(yy, ii, p, q, steps, lr))(y, init)
+
+
+def _difference(y: np.ndarray, d: int, seasonal_period: int) -> np.ndarray:
+    z = y
+    if seasonal_period and len(z) > seasonal_period:
+        z = z[seasonal_period:] - z[:-seasonal_period]
+    for _ in range(d):
+        z = np.diff(z)
+    return z
+
+
+def _arma_forecast(params: dict, history: np.ndarray, p: int, d: int,
+                   q: int, seasonal_period: int, scale: float,
+                   horizon: int) -> np.ndarray:
+    """Recurse the fitted ARMA forward and undo the differencing — the
+    single forecasting path shared by the serial forecaster and the
+    batched engine (bit-identical given identical params)."""
+    y = np.asarray(history, np.float64)
+    z = _difference(y, d, seasonal_period).astype(np.float64) / scale
+    phi = np.asarray(params["phi"], np.float64)
+    theta = np.asarray(params["theta"], np.float64)
+    c = float(params["c"])
+    resid = np.asarray(
+        _css_residuals(params, jnp.asarray(z, jnp.float32), p, q),
+        np.float64)
+    zs = list(z)
+    es = list(resid)
+    out = []
+    for h in range(horizon):
+        ar = sum(phi[i] * zs[-1 - i] for i in range(p)) if p else 0.0
+        ma = sum(theta[j] * es[-1 - j] for j in range(q)) if q else 0.0
+        znew = c + ar + ma
+        zs.append(znew)
+        es.append(0.0)
+        out.append(znew)
+    fz = np.asarray(out) * scale
+    # Undo differencing in reverse order of application:
+    # _difference applies seasonal first, then d ordinary diffs.
+    s = seasonal_period
+    base = y[s:] - y[:-s] if (s and len(y) > s) else y
+    levels = [base]
+    for _ in range(d):
+        levels.append(np.diff(levels[-1]))
+    for k in range(d, 0, -1):
+        fz = np.cumsum(fz) + levels[k - 1][-1]
+    if s and len(y) > s:
+        vals = []
+        hist = list(y)
+        for dz in fz:
+            vals.append(dz + hist[-s])
+            hist.append(vals[-1])
+        fz = np.asarray(vals)
+    return np.maximum(fz, 0.0)
+
+
+@dataclasses.dataclass
+class ARIMAForecaster:
+    p: int = 2
+    d: int = 1
+    q: int = 1
+    seasonal_period: int = 0     # one seasonal difference of this period
+    fit_steps: int = 400
+
+    params: Optional[dict] = None
+    _history: Optional[np.ndarray] = None
+    _scale: float = 1.0
+    _sse: float = 0.0
+    _n: int = 0
+
+    # ------------------------------------------------------------------ fit
+    def _difference(self, y: np.ndarray) -> np.ndarray:
+        return _difference(y, self.d, self.seasonal_period)
+
+    def fit(self, series: Sequence[float]) -> "ARIMAForecaster":
+        y = np.asarray(series, dtype=np.float32)
+        self._history = y
+        z = self._difference(y)
+        self._scale = float(np.std(z) + 1e-6)
+        zn = jnp.asarray(z / self._scale)
+        params, mse = _fit_arma(zn, self.p, self.q, steps=self.fit_steps)
+        self.params = jax.tree.map(np.asarray, params)
+        self._sse = float(mse) * len(z)
+        self._n = len(z)
+        return self
+
+    def aic(self) -> float:
+        k = self.p + self.q + 1
+        n = max(self._n, 1)
+        return n * float(np.log(self._sse / n + 1e-12)) + 2 * k
+
+    # ------------------------------------------------------------- forecast
+    def forecast(self, horizon: int) -> np.ndarray:
+        assert self.params is not None, "fit() first"
+        return _arma_forecast(self.params, self._history, self.p, self.d,
+                              self.q, self.seasonal_period, self._scale,
+                              horizon)
+
+
+def select_order(series, grid=((1, 1, 1), (2, 1, 1), (2, 1, 2), (3, 1, 1)),
+                 seasonal_period: int = 0, fit_steps: int = 300):
+    """AIC-based order selection (paper §7.1: 'ARIMA via AIC testing')."""
+    best, best_aic = None, np.inf
+    for (p, d, q) in grid:
+        f = ARIMAForecaster(p=p, d=d, q=q, seasonal_period=seasonal_period,
+                            fit_steps=fit_steps).fit(series)
+        a = f.aic()
+        if a < best_aic:
+            best, best_aic = f, a
+    return best
+
+
+class BatchForecastEngine:
+    """Stacked ARMA fitting for the hourly controller.
+
+    ``fit_forecast`` groups the (model, region) series by length, fits
+    each group with one ``jax.vmap``'d Adam scan, carries the fitted
+    parameters as the next fit's initialization (warm start: hour-to-
+    hour traffic changes little, so re-fits converge from the previous
+    optimum instead of zero), and returns per-key forecast arrays.
+
+    Series shorter than ``min_history()`` are skipped — the caller
+    applies its persistence fallback.  Seasonal differencing is applied
+    per group only when the history covers at least two full periods
+    (``len >= 2 * seasonal_period``), so short histories degrade to the
+    plain ARIMA rather than a truncated seasonal fit.
+    """
+
+    def __init__(self, p: int = 2, d: int = 1, q: int = 1,
+                 seasonal_period: int = 0, fit_steps: int = 200,
+                 warm_start: bool = True,
+                 max_fit_len: Optional[int] = None,
+                 length_quantum: int = 256):
+        self.p, self.d, self.q = p, d, q
+        self.seasonal_period = seasonal_period
+        self.fit_steps = fit_steps
+        self.warm_start = warm_start
+        # The jitted fit retraces per (S, L) shape, and an hourly loop
+        # grows L every hour — so fits run on the most recent
+        # ``max_fit_len`` buckets (default: two seasonal periods, or two
+        # days of minutes), with shorter histories rounded down to a
+        # ``length_quantum`` multiple.  Lengths then hit a fixed point
+        # and the steady state really is one trace, not one per hour.
+        self.max_fit_len = max_fit_len
+        self.length_quantum = length_quantum
+        self._warm: Dict[Key, dict] = {}     # key -> np param pytree
+        self.fits = 0                        # series fitted (lifetime)
+        self.batches = 0                     # batched dispatches (lifetime)
+
+    def min_history(self) -> int:
+        return max(8, self.p + self.q + 2)
+
+    def _seasonal_for(self, n: int) -> int:
+        s = self.seasonal_period
+        return s if (s and n >= 2 * s) else 0
+
+    def _fit_len(self, n: int) -> int:
+        cap = self.max_fit_len or (2 * self.seasonal_period
+                                   if self.seasonal_period else 2880)
+        cap = max(cap, self.min_history())
+        if n >= cap:
+            return cap
+        if n >= self.length_quantum:
+            return (n // self.length_quantum) * self.length_quantum
+        return n
+
+    # ------------------------------------------------------------------ fit
+    def fit_forecast(self, history: Dict[Key, np.ndarray], horizon: int
+                     ) -> Dict[Key, np.ndarray]:
+        """Fit every series long enough and forecast ``horizon`` steps.
+        Returns {key: forecast array}; too-short keys are absent."""
+        by_len: Dict[int, list] = {}
+        series: Dict[Key, np.ndarray] = {}
+        for key, raw in history.items():
+            y = np.asarray(raw, np.float32)
+            if len(y) < self.min_history():
+                continue
+            y = y[len(y) - self._fit_len(len(y)):]
+            series[key] = y
+            by_len.setdefault(len(y), []).append(key)
+
+        out: Dict[Key, np.ndarray] = {}
+        for n, keys in sorted(by_len.items()):
+            s_eff = self._seasonal_for(n)
+            zs, scales = [], []
+            for key in keys:
+                z = _difference(series[key], self.d, s_eff)
+                sc = float(np.std(z) + 1e-6)
+                zs.append(z / sc)
+                scales.append(sc)
+            ybatch = jnp.asarray(np.stack(zs).astype(np.float32))
+            init = self._stack_warm(keys)
+            params, _ = _fit_arma_batch(ybatch, init, self.p, self.q,
+                                        steps=self.fit_steps)
+            params = jax.tree.map(np.asarray, params)
+            self.batches += 1
+            for i, key in enumerate(keys):
+                prm = jax.tree.map(lambda a, i=i: a[i], params)
+                if self.warm_start:
+                    self._warm[key] = prm
+                self.fits += 1
+                out[key] = _arma_forecast(prm, series[key], self.p,
+                                          self.d, self.q, s_eff,
+                                          scales[i], horizon)
+        return out
+
+    def fit_forecast_serial(self, history: Dict[Key, np.ndarray],
+                            horizon: int) -> Dict[Key, np.ndarray]:
+        """Reference path: one cold ``ARIMAForecaster`` per series.
+        Used by the equivalence tests and the perf probe's baseline."""
+        out: Dict[Key, np.ndarray] = {}
+        for key, raw in history.items():
+            y = np.asarray(raw, np.float32)
+            if len(y) < self.min_history():
+                continue
+            y = y[len(y) - self._fit_len(len(y)):]
+            f = ARIMAForecaster(p=self.p, d=self.d, q=self.q,
+                                seasonal_period=self._seasonal_for(len(y)),
+                                fit_steps=self.fit_steps).fit(y)
+            out[key] = f.forecast(horizon)
+        return out
+
+    def _stack_warm(self, keys) -> dict:
+        cold = jax.tree.map(np.asarray, zero_params(self.p, self.q))
+        prms = [self._warm.get(k, cold) if self.warm_start else cold
+                for k in keys]
+        return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *prms)
+
+
+from repro.api.registry import register
+
+
+@register("forecaster", "arima")
+def _make_arima(ctx, **kwargs) -> ARIMAForecaster:
+    return ARIMAForecaster(**kwargs)

@@ -1,0 +1,195 @@
+"""SageServe controller (§6.3): hourly forecast → ILP → one ``Plan``.
+
+Every hour: refresh the per-(model, region) input-TPS forecasts (all
+series stacked through the ``jax.vmap``'d :class:`BatchForecastEngine`
+with warm-started parameters; a serial per-series path remains for
+reference), take the max of the next hour's forecast, add the NIW
+buffer β = ``buffer_frac`` × last-hour NIW load, solve the §5 ILP —
+optionally extended with cross-region spill fractions ω — and emit a
+single :class:`repro.api.plan.Plan`: instance targets (n + δ), the
+forecasts, the routing split and the solver's dollar objective.  The
+scaling policy (LT-I / LT-U / LT-UA) actuates the targets at its own
+pace; a plan-aware router consumes the ω fractions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.plan import Plan, RoutingPlan
+from repro.api.registry import register
+from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR
+from repro.control.forecast import ARIMAForecaster, BatchForecastEngine
+from repro.control.provision import (ProvisionProblem, ProvisionSolution,
+                                     solve, solve_with_routing)
+
+Key = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    models: Sequence[str]
+    regions: Sequence[str]
+    theta: Dict[str, float]           # TPS per instance, per model
+    alpha: float = DEFAULT_DOLLARS_PER_HOUR   # VM cost ($/h per paper)
+    startup_time: Dict[str, float] = dataclasses.field(default_factory=dict)
+    epsilon: float = 0.8
+    buffer_frac: float = 0.10         # β = 10% of last-hour NIW load
+    min_instances: int = 2
+    max_instances: Optional[int] = None
+    region_cap: Optional[float] = None
+    arima_order: Tuple[int, int, int] = (2, 1, 1)
+    seasonal_period: int = 0
+    fit_steps: int = 200
+    window_sec: float = 60.0          # TPS history bucket width
+    horizon_windows: int = 60         # forecast next hour in 1-min windows
+    batched: bool = True              # vmap'd stacked fits vs serial
+    use_routing: bool = False         # co-optimize ω spill fractions
+    spill_cost_per_tps: float = 1e-3  # λ: tie-break toward local serving
+    plan_horizon: float = 3600.0      # Plan validity window (s)
+
+
+class SageServeController:
+    def __init__(self, cfg: ControllerConfig):
+        self.cfg = cfg
+        p, d, q = cfg.arima_order
+        self.engine = BatchForecastEngine(
+            p=p, d=d, q=q, seasonal_period=cfg.seasonal_period,
+            fit_steps=cfg.fit_steps)
+        self.last_forecast: Dict[Key, float] = {}
+        self.last_solution: Optional[ProvisionSolution] = None
+        self.last_plan: Optional[Plan] = None
+        self.solve_history: List[Dict] = []
+
+    # ------------------------------------------------------------- forecast
+    def forecast_peaks(self, history: Dict[Key, np.ndarray]
+                       ) -> Dict[Key, float]:
+        peaks: Dict[Key, float] = {}
+        fit = (self.engine.fit_forecast if self.cfg.batched
+               else self.engine.fit_forecast_serial)
+        fitted = fit(history, self.cfg.horizon_windows)
+        for key, series in history.items():
+            fc = fitted.get(key)
+            if fc is None:
+                # not enough history: persist current level
+                series = np.asarray(series, float)
+                peaks[key] = float(series.max()) if len(series) else 0.0
+            else:
+                peaks[key] = float(np.max(fc))
+            self.last_forecast[key] = peaks[key]
+        return peaks
+
+    # ------------------------------------------------------------------ ILP
+    def plan(self, now: float,
+             instances: Dict[Key, int],
+             history: Dict[Key, np.ndarray],
+             niw_last_hour_tps: Dict[Key, float]) -> Plan:
+        """One hourly control decision: forecast, solve, emit the Plan."""
+        cfg = self.cfg
+        models, regions = list(cfg.models), list(cfg.regions)
+        l, r = len(models), len(regions)
+        t0 = time.perf_counter()
+        peaks = self.forecast_peaks(history)
+        t_forecast = time.perf_counter() - t0
+
+        n = np.zeros((l, r, 1))
+        rho = np.zeros((l, r))
+        buf = np.zeros((l, r))
+        theta = np.zeros((l, 1))
+        sigma = np.zeros((l, 1))
+        for i, m in enumerate(models):
+            theta[i, 0] = cfg.theta[m]
+            sigma[i, 0] = cfg.alpha * cfg.startup_time.get(m, 600.0) / 3600.0
+            for j, rg in enumerate(regions):
+                n[i, j, 0] = instances.get((m, rg), 0)
+                rho[i, j] = peaks.get((m, rg), 0.0)
+                buf[i, j] = cfg.buffer_frac * niw_last_hour_tps.get(
+                    (m, rg), 0.0)
+
+        prob = ProvisionProblem(
+            n=n, theta=theta, alpha=np.array([cfg.alpha]), sigma=sigma,
+            rho_peak=rho, epsilon=cfg.epsilon,
+            region_cap=(np.full(r, cfg.region_cap)
+                        if cfg.region_cap else None),
+            min_instances=cfg.min_instances,
+            max_instances=cfg.max_instances, buffer=buf)
+        t0 = time.perf_counter()
+        if cfg.use_routing:
+            sol = solve_with_routing(
+                prob, spill_cost_per_tps=cfg.spill_cost_per_tps)
+        else:
+            sol = solve(prob)
+        t_ilp = time.perf_counter() - t0
+        self.last_solution = sol
+        self.solve_history.append(
+            {"t": now, "objective": sol.objective, "status": sol.status,
+             "forecast_s": t_forecast, "ilp_s": t_ilp})
+
+        targets: Dict[Key, int] = {}
+        forecasts: Dict[Key, float] = {}
+        for i, m in enumerate(models):
+            for j, rg in enumerate(regions):
+                targets[(m, rg)] = int(round(n[i, j, 0]
+                                             + sol.delta[i, j, 0]))
+                forecasts[(m, rg)] = rho[i, j]
+
+        routing = None
+        if sol.omega is not None:
+            routing = _routing_plan(sol.omega, rho + buf, models, regions)
+        plan = Plan(t=now, targets=targets, forecasts=forecasts,
+                    routing=routing, horizon=cfg.plan_horizon,
+                    cost_estimate=float(sol.objective), status=sol.status)
+        self.last_plan = plan
+        return plan
+
+
+def _routing_plan(omega: np.ndarray, demand: np.ndarray,
+                  models: Sequence[str], regions: Sequence[str]
+                  ) -> RoutingPlan:
+    """ω (l, r, r) → per-(model, home) fraction dicts.  Zero-demand keys
+    are omitted (their ω rows are unconstrained by the objective), and
+    each emitted row is clipped/renormalized against solver round-off."""
+    fractions: Dict[Key, Dict[str, float]] = {}
+    for i, m in enumerate(models):
+        for j, home in enumerate(regions):
+            if demand[i, j] <= 1e-9:
+                continue
+            row = np.clip(omega[i, j], 0.0, 1.0)
+            total = row.sum()
+            if total <= 1e-9:
+                continue
+            row = row / total
+            fractions[(m, home)] = {
+                regions[jp]: float(row[jp]) for jp in range(len(regions))
+                if row[jp] > 1e-6}
+    return RoutingPlan(fractions=fractions)
+
+
+@register("planner", "sageserve")
+def _make_sageserve_planner(ctx, theta=None, theta_headroom: float = 0.7,
+                            **kwargs) -> SageServeController:
+    """GlobalPlanner factory: per-model θ (sustained input TPS per
+    instance, derated by ``theta_headroom`` to protect tail latency)
+    defaults from the build context's perf profiles.  The seasonal
+    period defaults to one day of ``window_sec`` buckets, capped so two
+    full periods fit inside the stack's TPS history lookback."""
+    if theta is None:
+        if ctx is None:
+            raise ValueError("planner 'sageserve' needs either explicit "
+                             "theta or a build context with profiles")
+        from repro.sim.perfmodel import sustained_input_tps
+        theta = {m: theta_headroom * sustained_input_tps(p)
+                 for m, p in ctx.profiles.items()}
+    if ctx is not None:
+        kwargs.setdefault("window_sec", getattr(ctx, "tps_window", 60.0))
+        if "seasonal_period" not in kwargs:
+            lookback = getattr(ctx, "history_lookback", 8 * 86400.0)
+            kwargs["seasonal_period"] = int(
+                min(86400.0, lookback / 2) // kwargs["window_sec"])
+    return SageServeController(ControllerConfig(
+        models=list(ctx.models) if ctx else list(theta),
+        regions=list(ctx.regions) if ctx else [],
+        theta=theta, **kwargs))

@@ -1,0 +1,261 @@
+"""§5 optimization problem: optimal instance-count deltas per (model,
+region, GPU type), optionally co-optimized with cross-region routing.
+
+Decision variables δ_{i,j,k} (integer changes to instance counts) with
+
+  per-region coverage:   Σ_k (n+δ)·θ_{i,k} ≥ ε · max_w ρ_{i,j}(w)   ∀ i,j
+  global coverage:       Σ_{j,k} (n+δ)·θ_{i,k} ≥ max_w Σ_j ρ_{i,j}(w) ∀ i
+  no over-deallocation:  δ ≥ -n
+  region VM capacity:    Σ_{i} gpus_k·(n+δ) ≤ cap_j                   ∀ j
+  endpoint bounds:       min_inst ≤ Σ_k (n+δ) ≤ max_inst              ∀ i,j
+
+  minimize γ + μ = Σ_k α_k Σ_{i,j} δ_{i,j,k} + Σ_{i,j,k} σ_{i,k}·max(0, δ)
+
+max(0, δ) is linearized with auxiliary m ≥ 0, m ≥ δ.
+
+``solve_with_routing`` extends the program with continuous spill
+fractions ω_{i,j→j'} ∈ [0, 1] — the share of region j's demand for
+model i served in region j' — replacing the myopic per-region coverage
+by explicit traffic assignment:
+
+  assignment:     Σ_{j'} ω_{i,j,j'} = 1                              ∀ i,j
+  home minimum:   ω_{i,j,j} ≥ ε                                      ∀ i,j
+  routed load:    Σ_j ρ_{i,j}·ω_{i,j,j'} ≤ Σ_k θ_{i,k}(n+δ)_{i,j',k} ∀ i,j'
+
+  minimize γ + μ + λ · Σ_{j≠j'} ρ_{i,j}·ω_{i,j,j'}
+
+The spill penalty λ (``spill_cost_per_tps``) is kept small relative to
+the VM price α so instance deltas dominate: spilling is a tie-break
+that prefers local serving, never a reason to buy capacity.  Any δ
+feasible for the myopic program is feasible here (set ω to the ε-home /
+transportation split), so with λ = 0 the co-optimized instance cost is
+never worse, and with λ > 0 it exceeds the myopic optimum by at most
+λ·(1-ε)·Σρ — negligible at the default λ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+from scipy.sparse import coo_matrix
+
+from repro.control.ilp import ILPResult, solve_ilp
+
+
+@dataclasses.dataclass
+class ProvisionProblem:
+    n: np.ndarray            # (l, r, g) current instances
+    theta: np.ndarray        # (l, g) TPS per instance of model i on GPU k
+    alpha: np.ndarray        # (g,)   VM acquisition cost
+    sigma: np.ndarray        # (l, g) model-deployment (cold-start) cost
+    rho_peak: np.ndarray     # (l, r) max_w forecast TPS
+    epsilon: float = 0.8     # min fraction served in-region
+    region_cap: Optional[np.ndarray] = None   # (r,) instance capacity
+    gpus_per_instance: Optional[np.ndarray] = None  # (l, g)
+    min_instances: int = 2
+    max_instances: Optional[int] = None
+    buffer: Optional[np.ndarray] = None       # (l, r) NIW headroom β (TPS)
+
+
+@dataclasses.dataclass
+class ProvisionSolution:
+    delta: np.ndarray        # (l, r, g)
+    objective: float
+    status: str
+    nodes: int
+    omega: Optional[np.ndarray] = None   # (l, r, r) routing fractions
+
+
+def _demand(problem: ProvisionProblem) -> np.ndarray:
+    rho = np.asarray(problem.rho_peak, float)
+    if problem.buffer is not None:
+        rho = rho + np.asarray(problem.buffer, float)
+    return rho
+
+
+def _delta_bounds(problem, n, rho, theta, l, r, g):
+    # Finite upper bounds keep the MIP search space compact: no model ever
+    # needs more than ceil(global demand / slowest θ) extra instances.
+    ub = np.empty((l, r, g))
+    for i in range(l):
+        need = max(rho[i].sum(), rho[i].max()) / max(theta[i].min(), 1e-9)
+        ub[i] = np.ceil(need) + problem.min_instances
+    ubf = ub.reshape(-1)
+    nf = n.reshape(-1)
+    nv = l * r * g
+    bounds = [(-nf[v], ubf[v]) for v in range(nv)]
+    bounds += [(0, ubf[v]) for v in range(nv)]   # m vars
+    return bounds
+
+
+class _RowBuilder:
+    def __init__(self):
+        self.rows, self.cols, self.vals, self.rhs = [], [], [], []
+        self.nrow = 0
+
+    def add(self, col_idx, col_val, rhs):
+        self.rows.extend([self.nrow] * len(col_idx))
+        self.cols.extend(col_idx)
+        self.vals.extend(col_val)
+        self.rhs.append(float(rhs))
+        self.nrow += 1
+
+    def matrix(self, ncols):
+        return coo_matrix((self.vals, (self.rows, self.cols)),
+                          shape=(self.nrow, ncols)).tocsr()
+
+
+def solve(problem: ProvisionProblem, max_nodes: int = 2000
+          ) -> ProvisionSolution:
+    n = np.asarray(problem.n, float)
+    l, r, g = n.shape
+    theta = np.asarray(problem.theta, float)
+    rho = _demand(problem)
+    nv = l * r * g
+
+    def vid(i, j, k):  # delta var id
+        return (i * r + j) * g + k
+
+    c = np.zeros(2 * nv)
+    c[:nv] = np.broadcast_to(problem.alpha, (l, r, g)).reshape(-1)
+    c[nv:] = np.broadcast_to(np.asarray(problem.sigma)[:, None, :],
+                             (l, r, g)).reshape(-1)
+
+    ub = _RowBuilder()
+
+    # m >= delta  ->  delta - m <= 0
+    for v in range(nv):
+        ub.add([v, nv + v], [1.0, -1.0], 0.0)
+
+    # per-region coverage: -Σ_k θ_{ik} δ_{ijk} <= Σ_k θ n - ε ρ
+    for i in range(l):
+        for j in range(r):
+            ub.add([vid(i, j, k) for k in range(g)],
+                   [-theta[i, k] for k in range(g)],
+                   (theta[i] * n[i, j]).sum() - problem.epsilon * rho[i, j])
+
+    # global coverage per model
+    for i in range(l):
+        idx = [vid(i, j, k) for j in range(r) for k in range(g)]
+        val = [-theta[i, k] for j in range(r) for k in range(g)]
+        rhs = (theta[i][None, :] * n[i]).sum() - rho[i].sum()
+        ub.add(idx, val, rhs)
+
+    _add_shared_rows(ub, problem, n, l, r, g, vid)
+
+    A_ub = ub.matrix(2 * nv)
+    bounds = _delta_bounds(problem, n, rho, theta, l, r, g)
+    integrality = np.concatenate([np.ones(nv, bool), np.zeros(nv, bool)])
+    res = solve_ilp(np.asarray(c), A_ub=A_ub,
+                    b_ub=np.asarray(ub.rhs), bounds=bounds,
+                    integrality=integrality, max_nodes=max_nodes)
+    delta = res.x[:nv].reshape(l, r, g)
+    return ProvisionSolution(delta=delta, objective=res.objective,
+                             status=res.status, nodes=res.nodes)
+
+
+def _add_shared_rows(ub: _RowBuilder, problem, n, l, r, g, vid):
+    """Rows common to both programs: region capacity and endpoint
+    min/max instance counts."""
+    if problem.region_cap is not None:
+        gpi = (problem.gpus_per_instance
+               if problem.gpus_per_instance is not None
+               else np.ones((l, g)))
+        for j in range(r):
+            idx = [vid(i, j, k) for i in range(l) for k in range(g)]
+            val = [gpi[i, k] for i in range(l) for k in range(g)]
+            rhs = problem.region_cap[j] - sum(
+                gpi[i, k] * n[i, j, k] for i in range(l) for k in range(g))
+            ub.add(idx, val, rhs)
+
+    for i in range(l):
+        for j in range(r):
+            idx = [vid(i, j, k) for k in range(g)]
+            ub.add(idx, [-1.0] * g, n[i, j].sum() - problem.min_instances)
+            if problem.max_instances is not None:
+                ub.add(idx, [1.0] * g,
+                       problem.max_instances - n[i, j].sum())
+
+
+def solve_with_routing(problem: ProvisionProblem,
+                       spill_cost_per_tps: float = 1e-3,
+                       max_nodes: int = 2000) -> ProvisionSolution:
+    """Co-optimize instance deltas with cross-region routing fractions
+    ω_{i,j→j'} (see module docstring).  Returns a solution whose
+    ``omega[i, j]`` rows are the traffic split of (model i, home j)."""
+    n = np.asarray(problem.n, float)
+    l, r, g = n.shape
+    theta = np.asarray(problem.theta, float)
+    rho = _demand(problem)
+    nv = l * r * g
+    nw = l * r * r
+    ntot = 2 * nv + nw
+
+    def vid(i, j, k):  # delta var id
+        return (i * r + j) * g + k
+
+    def wid(i, j, jp):  # spill var id (offset by 2*nv)
+        return 2 * nv + (i * r + j) * r + jp
+
+    c = np.zeros(ntot)
+    c[:nv] = np.broadcast_to(problem.alpha, (l, r, g)).reshape(-1)
+    c[nv:2 * nv] = np.broadcast_to(np.asarray(problem.sigma)[:, None, :],
+                                   (l, r, g)).reshape(-1)
+    for i in range(l):
+        for j in range(r):
+            for jp in range(r):
+                if jp != j:
+                    c[wid(i, j, jp)] = spill_cost_per_tps * rho[i, j]
+
+    ub = _RowBuilder()
+
+    # m >= delta  ->  delta - m <= 0
+    for v in range(nv):
+        ub.add([v, nv + v], [1.0, -1.0], 0.0)
+
+    # home minimum: -ω_{ijj} <= -ε  (harmless for zero-demand keys: the
+    # routed-load coefficient ρ·ω is 0 there, so it cannot bind capacity)
+    for i in range(l):
+        for j in range(r):
+            ub.add([wid(i, j, j)], [-1.0], -problem.epsilon)
+
+    # routed load fits capacity:
+    #   Σ_j ρ_{ij} ω_{ijj'} - Σ_k θ_{ik} δ_{ij'k} <= Σ_k θ_{ik} n_{ij'k}
+    for i in range(l):
+        for jp in range(r):
+            idx = [wid(i, j, jp) for j in range(r)]
+            val = [rho[i, j] for j in range(r)]
+            idx += [vid(i, jp, k) for k in range(g)]
+            val += [-theta[i, k] for k in range(g)]
+            ub.add(idx, val, (theta[i] * n[i, jp]).sum())
+
+    # global coverage per model (redundant given the routed-load rows +
+    # assignment equalities, but keeps the LP relaxation tight)
+    for i in range(l):
+        idx = [vid(i, j, k) for j in range(r) for k in range(g)]
+        val = [-theta[i, k] for j in range(r) for k in range(g)]
+        rhs = (theta[i][None, :] * n[i]).sum() - rho[i].sum()
+        ub.add(idx, val, rhs)
+
+    _add_shared_rows(ub, problem, n, l, r, g, vid)
+
+    # assignment: Σ_{j'} ω_{ijj'} = 1
+    eq = _RowBuilder()
+    for i in range(l):
+        for j in range(r):
+            eq.add([wid(i, j, jp) for jp in range(r)], [1.0] * r, 1.0)
+
+    bounds = _delta_bounds(problem, n, rho, theta, l, r, g)
+    bounds += [(0.0, 1.0)] * nw
+    integrality = np.concatenate([np.ones(nv, bool),
+                                  np.zeros(nv + nw, bool)])
+    res = solve_ilp(np.asarray(c), A_ub=ub.matrix(ntot),
+                    b_ub=np.asarray(ub.rhs), A_eq=eq.matrix(ntot),
+                    b_eq=np.asarray(eq.rhs), bounds=bounds,
+                    integrality=integrality, max_nodes=max_nodes)
+    delta = res.x[:nv].reshape(l, r, g)
+    omega = res.x[2 * nv:].reshape(l, r, r)
+    return ProvisionSolution(delta=delta, objective=res.objective,
+                             status=res.status, nodes=res.nodes,
+                             omega=omega)

@@ -1,136 +1,5 @@
-"""SageServe controller (§6.3): hourly forecast → ILP → scaling targets.
-
-Every hour: fit/refresh an ARIMA model on the per-(model, region) input-
-TPS history, take the max of the next hour's forecast, add the NIW buffer
-β = ``buffer_frac`` × last-hour NIW load, solve the §5 ILP, and hand the
-resulting instance targets (n + δ) plus the forecasts to the scaling
-policy (LT-I / LT-U / LT-UA actuate them at their own pace).
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from repro.api.registry import register
-from repro.core.forecast import ARIMAForecaster
-from repro.core.provisioner import ProvisionProblem, ProvisionSolution, solve
-
-Key = Tuple[str, str]
-
-
-@dataclasses.dataclass
-class ControllerConfig:
-    models: Sequence[str]
-    regions: Sequence[str]
-    theta: Dict[str, float]           # TPS per instance, per model
-    alpha: float = 98.32              # VM cost ($/h per paper)
-    startup_time: Dict[str, float] = dataclasses.field(default_factory=dict)
-    epsilon: float = 0.8
-    buffer_frac: float = 0.10         # β = 10% of last-hour NIW load
-    min_instances: int = 2
-    max_instances: Optional[int] = None
-    region_cap: Optional[float] = None
-    arima_order: Tuple[int, int, int] = (2, 1, 1)
-    seasonal_period: int = 0
-    fit_steps: int = 200
-    window_sec: float = 60.0          # TPS history bucket width
-    horizon_windows: int = 60         # forecast next hour in 1-min windows
-
-
-class SageServeController:
-    def __init__(self, cfg: ControllerConfig):
-        self.cfg = cfg
-        self._forecasters: Dict[Key, ARIMAForecaster] = {}
-        self.last_forecast: Dict[Key, float] = {}
-        self.last_solution: Optional[ProvisionSolution] = None
-        self.solve_history: List[Dict] = []
-
-    # ------------------------------------------------------------- forecast
-    def forecast_peaks(self, history: Dict[Key, np.ndarray]
-                       ) -> Dict[Key, float]:
-        peaks: Dict[Key, float] = {}
-        p, d, q = self.cfg.arima_order
-        for key, series in history.items():
-            series = np.asarray(series, float)
-            if len(series) < max(8, p + q + 2 * (self.cfg.seasonal_period
-                                                 or 0) + 2):
-                # not enough history: persist current level
-                peaks[key] = float(series.max()) if len(series) else 0.0
-                self.last_forecast[key] = peaks[key]
-                continue
-            f = ARIMAForecaster(p=p, d=d, q=q,
-                                seasonal_period=self.cfg.seasonal_period,
-                                fit_steps=self.cfg.fit_steps).fit(series)
-            self._forecasters[key] = f
-            fc = f.forecast(self.cfg.horizon_windows)
-            peaks[key] = float(np.max(fc))
-            self.last_forecast[key] = peaks[key]
-        return peaks
-
-    # ------------------------------------------------------------------ ILP
-    def plan(self, now: float,
-             instances: Dict[Key, int],
-             history: Dict[Key, np.ndarray],
-             niw_last_hour_tps: Dict[Key, float]
-             ) -> Tuple[Dict[Key, int], Dict[Key, float]]:
-        """Returns (targets n+δ per key, forecast TPS per key)."""
-        cfg = self.cfg
-        models, regions = list(cfg.models), list(cfg.regions)
-        l, r = len(models), len(regions)
-        peaks = self.forecast_peaks(history)
-
-        n = np.zeros((l, r, 1))
-        rho = np.zeros((l, r))
-        buf = np.zeros((l, r))
-        theta = np.zeros((l, 1))
-        sigma = np.zeros((l, 1))
-        for i, m in enumerate(models):
-            theta[i, 0] = cfg.theta[m]
-            sigma[i, 0] = cfg.alpha * cfg.startup_time.get(m, 600.0) / 3600.0
-            for j, rg in enumerate(regions):
-                n[i, j, 0] = instances.get((m, rg), 0)
-                rho[i, j] = peaks.get((m, rg), 0.0)
-                buf[i, j] = cfg.buffer_frac * niw_last_hour_tps.get(
-                    (m, rg), 0.0)
-
-        prob = ProvisionProblem(
-            n=n, theta=theta, alpha=np.array([cfg.alpha]), sigma=sigma,
-            rho_peak=rho, epsilon=cfg.epsilon,
-            region_cap=(np.full(r, cfg.region_cap)
-                        if cfg.region_cap else None),
-            min_instances=cfg.min_instances,
-            max_instances=cfg.max_instances, buffer=buf)
-        sol = solve(prob)
-        self.last_solution = sol
-        self.solve_history.append(
-            {"t": now, "objective": sol.objective, "status": sol.status})
-
-        targets: Dict[Key, int] = {}
-        forecasts: Dict[Key, float] = {}
-        for i, m in enumerate(models):
-            for j, rg in enumerate(regions):
-                targets[(m, rg)] = int(round(n[i, j, 0]
-                                             + sol.delta[i, j, 0]))
-                forecasts[(m, rg)] = rho[i, j]
-        return targets, forecasts
-
-
-@register("planner", "sageserve")
-def _make_sageserve_planner(ctx, theta=None, theta_headroom: float = 0.7,
-                            **kwargs) -> SageServeController:
-    """GlobalPlanner factory: per-model θ (sustained input TPS per
-    instance, derated by ``theta_headroom`` to protect tail latency)
-    defaults from the build context's perf profiles."""
-    if theta is None:
-        if ctx is None:
-            raise ValueError("planner 'sageserve' needs either explicit "
-                             "theta or a build context with profiles")
-        from repro.sim.perfmodel import sustained_input_tps
-        theta = {m: theta_headroom * sustained_input_tps(p)
-                 for m, p in ctx.profiles.items()}
-    return SageServeController(ControllerConfig(
-        models=list(ctx.models) if ctx else list(theta),
-        regions=list(ctx.regions) if ctx else [],
-        theta=theta, **kwargs))
+"""Import shim: the hourly controller moved to
+:mod:`repro.control.planner` when the control plane was unified
+(see docs/CONTROL.md)."""
+from repro.control.planner import (ControllerConfig,    # noqa: F401
+                                   SageServeController)

@@ -1,176 +1,5 @@
-"""ARIMA traffic forecasting, fit with JAX (CSS objective, Adam).
-
-The paper forecasts next-hour input TPS per (model, region) with ARIMA
-and selects hyper-parameters by AIC (§6.3, §7.1).  We implement
-ARIMA(p, d, q) with optional seasonal differencing: the series is
-differenced ``d`` times (+ one seasonal difference of period ``s`` when
-``seasonal_period`` is set), then an ARMA(p, q) is fit by conditional
-sum-of-squares — the residual recursion runs under ``jax.lax.scan`` and
-the parameters are optimized with ``jax.grad`` + Adam.  Forecasting
-recurses the fitted ARMA forward and integrates the differences back.
-"""
-from __future__ import annotations
-
-import dataclasses
-import functools
-from typing import Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@functools.partial(jax.jit, static_argnames=("p", "q"))
-def _css_residuals(params, y, p: int, q: int):
-    """Conditional-sum-of-squares residuals of ARMA(p, q)."""
-    c, phi, theta = params["c"], params["phi"], params["theta"]
-    k = max(p, q, 1)
-    ypad = jnp.concatenate([jnp.zeros((k,), y.dtype), y])
-    epad0 = jnp.zeros((k,), y.dtype)
-
-    def step(carry, t):
-        e_hist = carry  # last k residuals, most recent first
-        y_lags = jax.lax.dynamic_slice(ypad, (t,), (k,))[::-1]
-        ar = jnp.dot(phi, y_lags[:p]) if p else 0.0
-        ma = jnp.dot(theta, e_hist[:q]) if q else 0.0
-        pred = c + ar + ma
-        e = ypad[t + k] - pred
-        e_hist = jnp.concatenate([e[None], e_hist[:-1]])
-        return e_hist, e
-
-    _, resid = jax.lax.scan(step, epad0, jnp.arange(y.shape[0]))
-    return resid
-
-
-@functools.partial(jax.jit, static_argnames=("p", "q", "steps"))
-def _fit_arma(y, p: int, q: int, steps: int = 400, lr: float = 0.05):
-    params = {"c": jnp.zeros(()), "phi": jnp.zeros((p,)),
-              "theta": jnp.zeros((q,))}
-
-    def loss_fn(prm):
-        e = _css_residuals(prm, y, p, q)
-        return jnp.mean(jnp.square(e))
-
-    grad_fn = jax.value_and_grad(loss_fn)
-    # Adam
-    m = jax.tree.map(jnp.zeros_like, params)
-    v = jax.tree.map(jnp.zeros_like, params)
-
-    def opt_step(carry, i):
-        prm, m, v = carry
-        loss, g = grad_fn(prm)
-        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
-        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
-        t = i + 1
-        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
-        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
-        prm = jax.tree.map(lambda pp, a, b: pp - lr * a /
-                           (jnp.sqrt(b) + 1e-8), prm, mh, vh)
-        return (prm, m, v), loss
-
-    (params, _, _), losses = jax.lax.scan(
-        opt_step, (params, m, v), jnp.arange(steps, dtype=jnp.float32))
-    return params, losses[-1]
-
-
-@dataclasses.dataclass
-class ARIMAForecaster:
-    p: int = 2
-    d: int = 1
-    q: int = 1
-    seasonal_period: int = 0     # one seasonal difference of this period
-    fit_steps: int = 400
-
-    params: Optional[dict] = None
-    _history: Optional[np.ndarray] = None
-    _scale: float = 1.0
-    _sse: float = 0.0
-    _n: int = 0
-
-    # ------------------------------------------------------------------ fit
-    def _difference(self, y: np.ndarray) -> np.ndarray:
-        z = y
-        if self.seasonal_period and len(z) > self.seasonal_period:
-            z = z[self.seasonal_period:] - z[:-self.seasonal_period]
-        for _ in range(self.d):
-            z = np.diff(z)
-        return z
-
-    def fit(self, series: Sequence[float]) -> "ARIMAForecaster":
-        y = np.asarray(series, dtype=np.float32)
-        self._history = y
-        z = self._difference(y)
-        self._scale = float(np.std(z) + 1e-6)
-        zn = jnp.asarray(z / self._scale)
-        params, mse = _fit_arma(zn, self.p, self.q, steps=self.fit_steps)
-        self.params = jax.tree.map(np.asarray, params)
-        self._sse = float(mse) * len(z)
-        self._n = len(z)
-        return self
-
-    def aic(self) -> float:
-        k = self.p + self.q + 1
-        n = max(self._n, 1)
-        return n * float(np.log(self._sse / n + 1e-12)) + 2 * k
-
-    # ------------------------------------------------------------- forecast
-    def forecast(self, horizon: int) -> np.ndarray:
-        assert self.params is not None, "fit() first"
-        y = self._history.astype(np.float64)
-        z = self._difference(y).astype(np.float64) / self._scale
-        p, q = self.p, self.q
-        phi = np.asarray(self.params["phi"], np.float64)
-        theta = np.asarray(self.params["theta"], np.float64)
-        c = float(self.params["c"])
-        resid = np.asarray(
-            _css_residuals(self.params, jnp.asarray(z, jnp.float32), p, q),
-            np.float64)
-        zs = list(z)
-        es = list(resid)
-        out = []
-        for h in range(horizon):
-            ar = sum(phi[i] * zs[-1 - i] for i in range(p)) if p else 0.0
-            ma = sum(theta[j] * es[-1 - j] for j in range(q)) if q else 0.0
-            znew = c + ar + ma
-            zs.append(znew)
-            es.append(0.0)
-            out.append(znew)
-        fz = np.asarray(out) * self._scale
-        # Undo differencing in reverse order of application:
-        # _difference applies seasonal first, then d ordinary diffs.
-        s = self.seasonal_period
-        base = y[s:] - y[:-s] if (s and len(y) > s) else y
-        levels = [base]
-        for _ in range(self.d):
-            levels.append(np.diff(levels[-1]))
-        for k in range(self.d, 0, -1):
-            fz = np.cumsum(fz) + levels[k - 1][-1]
-        if s and len(y) > s:
-            vals = []
-            hist = list(y)
-            for dz in fz:
-                vals.append(dz + hist[-s])
-                hist.append(vals[-1])
-            fz = np.asarray(vals)
-        return np.maximum(fz, 0.0)
-
-
-def select_order(series, grid=((1, 1, 1), (2, 1, 1), (2, 1, 2), (3, 1, 1)),
-                 seasonal_period: int = 0, fit_steps: int = 300):
-    """AIC-based order selection (paper §7.1: 'ARIMA via AIC testing')."""
-    best, best_aic = None, np.inf
-    for (p, d, q) in grid:
-        f = ARIMAForecaster(p=p, d=d, q=q, seasonal_period=seasonal_period,
-                            fit_steps=fit_steps).fit(series)
-        a = f.aic()
-        if a < best_aic:
-            best, best_aic = f, a
-    return best
-
-
-from repro.api.registry import register
-
-
-@register("forecaster", "arima")
-def _make_arima(ctx, **kwargs) -> ARIMAForecaster:
-    return ARIMAForecaster(**kwargs)
+"""Import shim: the forecaster moved to :mod:`repro.control.forecast`
+when the control plane was unified (see docs/CONTROL.md)."""
+from repro.control.forecast import (ARIMAForecaster,          # noqa: F401
+                                    BatchForecastEngine, _css_residuals,
+                                    _fit_arma, select_order)

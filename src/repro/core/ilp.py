@@ -1,134 +1,3 @@
-"""Integer Linear Program solver: branch-and-bound over LP relaxations.
-
-Own best-first B&B with HiGHS (``scipy.optimize.linprog``) solving node
-relaxations; suits the provisioning problems of §5 (tens–hundreds of
-integer vars).  The test-suite cross-checks solutions against
-``scipy.optimize.milp`` on random instances.
-"""
-from __future__ import annotations
-
-import dataclasses
-import heapq
-import itertools
-import math
-from typing import Optional, Tuple
-
-import numpy as np
-import scipy.sparse as sp
-from scipy.optimize import Bounds, LinearConstraint, linprog, milp
-
-
-def _as_matrix(A):
-    if A is None or sp.issparse(A):
-        return A
-    return np.asarray(A, float)
-
-
-def _solve_milp(c, A_ub, b_ub, A_eq, b_eq, bounds, integrality,
-                time_limit: float = 60.0, mip_rel_gap: float = 1e-3
-                ) -> "ILPResult":
-    n = c.shape[0]
-    cons = []
-    if A_ub is not None:
-        cons.append(LinearConstraint(_as_matrix(A_ub), -np.inf,
-                                     np.asarray(b_ub, float)))
-    if A_eq is not None:
-        cons.append(LinearConstraint(_as_matrix(A_eq),
-                                     np.asarray(b_eq, float),
-                                     np.asarray(b_eq, float)))
-    lo = np.array([(-np.inf if b[0] is None else b[0]) for b in bounds])
-    hi = np.array([(np.inf if b[1] is None else b[1]) for b in bounds])
-    res = milp(c, constraints=cons, bounds=Bounds(lo, hi),
-               integrality=integrality.astype(int),
-               options={"time_limit": time_limit,
-                        "mip_rel_gap": mip_rel_gap})
-    if res.status != 0 or res.x is None:
-        return ILPResult(np.zeros(n), math.inf, "infeasible", 1, math.inf)
-    x = np.where(integrality, np.round(res.x), res.x)
-    return ILPResult(x, float(c @ x), "optimal", 1, 0.0)
-
-
-@dataclasses.dataclass
-class ILPResult:
-    x: np.ndarray
-    objective: float
-    status: str            # optimal | feasible | infeasible
-    nodes: int
-    gap: float
-
-
-def solve_ilp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, bounds=None,
-              integrality: Optional[np.ndarray] = None,
-              max_nodes: int = 2000, tol: float = 1e-6,
-              backend: str = "milp", time_limit: float = 60.0,
-              mip_rel_gap: float = 1e-3) -> ILPResult:
-    """Minimize c @ x subject to A_ub x <= b_ub, A_eq x = b_eq, bounds.
-
-    integrality: bool mask per var (default: all integer).
-    backend: "milp" (HiGHS MIP) or "bnb" (own branch-and-bound over
-    linprog relaxations; cross-checked against milp in the tests).
-    """
-    c = np.asarray(c, float)
-    n = c.shape[0]
-    if integrality is None:
-        integrality = np.ones(n, bool)
-    else:
-        integrality = np.asarray(integrality, bool)
-    if bounds is None:
-        bounds = [(0, None)] * n
-
-    if backend == "milp":
-        return _solve_milp(c, A_ub, b_ub, A_eq, b_eq, bounds, integrality,
-                           time_limit=time_limit, mip_rel_gap=mip_rel_gap)
-
-    def relax(bnds):
-        r = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq,
-                    bounds=bnds, method="highs")
-        return r
-
-    def frac_var(x):
-        f = np.abs(x - np.round(x))
-        f = np.where(integrality, f, 0.0)
-        i = int(np.argmax(f))
-        return (i, f[i]) if f[i] > tol else (None, 0.0)
-
-    root = relax(bounds)
-    if root.status != 0:
-        return ILPResult(np.zeros(n), math.inf, "infeasible", 1, math.inf)
-
-    best_x, best_obj = None, math.inf
-    counter = itertools.count()
-    heap = [(root.fun, next(counter), bounds, root)]
-    nodes = 0
-    while heap and nodes < max_nodes:
-        lb, _, bnds, res = heapq.heappop(heap)
-        if lb >= best_obj - tol:
-            continue
-        nodes += 1
-        i, f = frac_var(res.x)
-        if i is None:  # integral solution
-            if res.fun < best_obj:
-                best_obj, best_x = res.fun, np.round(
-                    np.where(integrality, np.round(res.x), res.x), 9)
-            continue
-        lo, hi = bnds[i]
-        xi = res.x[i]
-        for newb in (((lo, math.floor(xi)), "dn"),
-                     ((math.ceil(xi), hi), "up")):
-            (nlo, nhi), _ = newb
-            if nhi is not None and nlo is not None and nlo > nhi:
-                continue
-            nb = list(bnds)
-            nb[i] = (nlo, nhi)
-            r = relax(nb)
-            if r.status == 0 and r.fun < best_obj - tol:
-                heapq.heappush(heap, (r.fun, next(counter), nb, r))
-
-    if best_x is None:
-        # fall back: round the root relaxation and repair bounds
-        xr = np.where(integrality, np.round(root.x), root.x)
-        return ILPResult(xr, float(c @ xr), "feasible", nodes, math.inf)
-    gap = 0.0 if not heap else max(0.0, best_obj - min(h[0] for h in heap))
-    status = "optimal" if (not heap or gap <= tol) and nodes < max_nodes \
-        else "feasible"
-    return ILPResult(best_x, float(best_obj), status, nodes, gap)
+"""Import shim: the ILP solver moved to :mod:`repro.control.ilp`
+when the control plane was unified (see docs/CONTROL.md)."""
+from repro.control.ilp import ILPResult, solve_ilp      # noqa: F401

@@ -1,137 +1,5 @@
-"""§5 optimization problem: optimal instance-count deltas per (model,
-region, GPU type).
-
-Decision variables δ_{i,j,k} (integer changes to instance counts) with
-
-  per-region coverage:   Σ_k (n+δ)·θ_{i,k} ≥ ε · max_w ρ_{i,j}(w)   ∀ i,j
-  global coverage:       Σ_{j,k} (n+δ)·θ_{i,k} ≥ max_w Σ_j ρ_{i,j}(w) ∀ i
-  no over-deallocation:  δ ≥ -n
-  region VM capacity:    Σ_{i} gpus_k·(n+δ) ≤ cap_j                   ∀ j
-  endpoint bounds:       min_inst ≤ Σ_k (n+δ) ≤ max_inst              ∀ i,j
-
-  minimize γ + μ = Σ_k α_k Σ_{i,j} δ_{i,j,k} + Σ_{i,j,k} σ_{i,k}·max(0, δ)
-
-max(0, δ) is linearized with auxiliary m ≥ 0, m ≥ δ.
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Optional
-
-import numpy as np
-from scipy.sparse import coo_matrix
-
-from repro.core.ilp import ILPResult, solve_ilp
-
-
-@dataclasses.dataclass
-class ProvisionProblem:
-    n: np.ndarray            # (l, r, g) current instances
-    theta: np.ndarray        # (l, g) TPS per instance of model i on GPU k
-    alpha: np.ndarray        # (g,)   VM acquisition cost
-    sigma: np.ndarray        # (l, g) model-deployment (cold-start) cost
-    rho_peak: np.ndarray     # (l, r) max_w forecast TPS
-    epsilon: float = 0.8     # min fraction served in-region
-    region_cap: Optional[np.ndarray] = None   # (r,) instance capacity
-    gpus_per_instance: Optional[np.ndarray] = None  # (l, g)
-    min_instances: int = 2
-    max_instances: Optional[int] = None
-    buffer: Optional[np.ndarray] = None       # (l, r) NIW headroom β (TPS)
-
-
-@dataclasses.dataclass
-class ProvisionSolution:
-    delta: np.ndarray        # (l, r, g)
-    objective: float
-    status: str
-    nodes: int
-
-
-def solve(problem: ProvisionProblem, max_nodes: int = 2000
-          ) -> ProvisionSolution:
-    n = np.asarray(problem.n, float)
-    l, r, g = n.shape
-    theta = np.asarray(problem.theta, float)
-    rho = np.asarray(problem.rho_peak, float)
-    if problem.buffer is not None:
-        rho = rho + np.asarray(problem.buffer, float)
-    nv = l * r * g
-
-    def vid(i, j, k):  # delta var id
-        return (i * r + j) * g + k
-
-    c = np.zeros(2 * nv)
-    c[:nv] = np.broadcast_to(problem.alpha, (l, r, g)).reshape(-1)
-    c[nv:] = np.broadcast_to(np.asarray(problem.sigma)[:, None, :],
-                             (l, r, g)).reshape(-1)
-
-    rows, cols, vals, b_ub = [], [], [], []
-    nrow = 0
-
-    def add_row(col_idx, col_val, rhs):
-        nonlocal nrow
-        rows.extend([nrow] * len(col_idx))
-        cols.extend(col_idx)
-        vals.extend(col_val)
-        b_ub.append(float(rhs))
-        nrow += 1
-
-    # m >= delta  ->  delta - m <= 0
-    for v in range(nv):
-        add_row([v, nv + v], [1.0, -1.0], 0.0)
-
-    # per-region coverage: -Σ_k θ_{ik} δ_{ijk} <= Σ_k θ n - ε ρ
-    for i in range(l):
-        for j in range(r):
-            add_row([vid(i, j, k) for k in range(g)],
-                    [-theta[i, k] for k in range(g)],
-                    (theta[i] * n[i, j]).sum() - problem.epsilon * rho[i, j])
-
-    # global coverage per model
-    for i in range(l):
-        idx = [vid(i, j, k) for j in range(r) for k in range(g)]
-        val = [-theta[i, k] for j in range(r) for k in range(g)]
-        rhs = (theta[i][None, :] * n[i]).sum() - rho[i].sum()
-        add_row(idx, val, rhs)
-
-    # region capacity
-    if problem.region_cap is not None:
-        gpi = (problem.gpus_per_instance
-               if problem.gpus_per_instance is not None
-               else np.ones((l, g)))
-        for j in range(r):
-            idx = [vid(i, j, k) for i in range(l) for k in range(g)]
-            val = [gpi[i, k] for i in range(l) for k in range(g)]
-            rhs = problem.region_cap[j] - sum(
-                gpi[i, k] * n[i, j, k] for i in range(l) for k in range(g))
-            add_row(idx, val, rhs)
-
-    # endpoint min/max instance count: min_inst <= Σ_k (n+δ) <= max_inst
-    for i in range(l):
-        for j in range(r):
-            idx = [vid(i, j, k) for k in range(g)]
-            add_row(idx, [-1.0] * g, n[i, j].sum() - problem.min_instances)
-            if problem.max_instances is not None:
-                add_row(idx, [1.0] * g,
-                        problem.max_instances - n[i, j].sum())
-
-    A_ub = coo_matrix((vals, (rows, cols)), shape=(nrow, 2 * nv)).tocsr()
-
-    # Finite upper bounds keep the MIP search space compact: no model ever
-    # needs more than ceil(global demand / slowest θ) extra instances.
-    ub = np.empty((l, r, g))
-    for i in range(l):
-        need = max(rho[i].sum(), rho[i].max()) / max(theta[i].min(), 1e-9)
-        ub[i] = np.ceil(need) + problem.min_instances
-    ubf = ub.reshape(-1)
-    nf = n.reshape(-1)
-    bounds = [(-nf[v], ubf[v]) for v in range(nv)]
-    bounds += [(0, ubf[v]) for v in range(nv)]   # m vars
-
-    integrality = np.concatenate([np.ones(nv, bool), np.zeros(nv, bool)])
-    res = solve_ilp(np.asarray(c), A_ub=A_ub,
-                    b_ub=np.asarray(b_ub), bounds=bounds,
-                    integrality=integrality, max_nodes=max_nodes)
-    delta = res.x[:nv].reshape(l, r, g)
-    return ProvisionSolution(delta=delta, objective=res.objective,
-                             status=res.status, nodes=res.nodes)
+"""Import shim: the provisioner moved to :mod:`repro.control.provision`
+when the control plane was unified (see docs/CONTROL.md)."""
+from repro.control.provision import (ProvisionProblem,  # noqa: F401
+                                     ProvisionSolution, solve,
+                                     solve_with_routing)

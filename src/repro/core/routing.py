@@ -1,64 +1,5 @@
-"""Routing logic (§6.1): global region routing, endpoint JSQ, instance pick.
-
-Global IW routing: pick the first preferred region whose effective memory
-utilization is below ``threshold``; if none qualifies, the least-utilized
-region.  Endpoint routing: least-loaded deployment by effective memory;
-instance routing: Join-the-Shortest-Queue on remaining tokens.
-"""
-from __future__ import annotations
-
-from typing import Dict, Mapping, Sequence
-
-from repro.api.registry import register
-
-
-def route_global(region_utils: Dict[str, float],
-                 preference: Sequence[str],
-                 threshold: float = 0.7) -> str:
-    """region_utils: effective mem util per candidate region.
-
-    Preferred regions absent from ``region_utils`` (no endpoint deployed
-    there) are skipped.  When no utilization data exists at all, the
-    home region — the first preference — is the documented fallback.
-    """
-    for r in preference:
-        if r in region_utils and region_utils[r] < threshold:
-            return r
-    if not region_utils:
-        if not preference:
-            raise ValueError("route_global: no candidate regions and no "
-                             "preference to fall back to")
-        return preference[0]
-    return min(region_utils, key=region_utils.get)
-
-
-def route_jsq(instance_loads: Dict[str, float]) -> str:
-    """instance id -> remaining tokens to process; pick the minimum."""
-    return min(instance_loads, key=lambda k: (instance_loads[k], k))
-
-
-def pick_endpoint(endpoint_utils: Dict[str, float]) -> str:
-    """Least effective-memory-utilized deployment endpoint in a region."""
-    return min(endpoint_utils, key=lambda k: (endpoint_utils[k], k))
-
-
-class ThresholdRouter:
-    """``Router``-protocol wrapper around ``route_global``."""
-
-    def __init__(self, threshold: float = 0.7):
-        self.threshold = threshold
-
-    def route(self, region_utils: Mapping[str, float],
-              preference: Sequence[str]) -> str:
-        return route_global(dict(region_utils), preference, self.threshold)
-
-    def home_threshold(self) -> float:
-        """Optional fast-path capability (duck-typed by the simulator):
-        a utilization bound below which the first preferred region always
-        wins, letting callers skip assembling the full utils map."""
-        return self.threshold
-
-
-@register("router", "threshold")
-def _make_threshold_router(ctx, **kwargs) -> ThresholdRouter:
-    return ThresholdRouter(**kwargs)
+"""Import shim: routing moved to :mod:`repro.control.routing`
+when the control plane was unified (see docs/CONTROL.md)."""
+from repro.control.routing import (PlanAwareRouter,     # noqa: F401
+                                   ThresholdRouter, pick_endpoint,
+                                   route_global, route_jsq)

@@ -122,6 +122,7 @@ class LTPolicy(ScalingPolicy):
         self.forecasts: Dict[Key, float] = {}
         self._last: Dict[Key, float] = {}
         self._hour_start: float = 0.0
+        self._totals: Dict[Key, int] = {}   # live+pending seen on_tick
 
     # ------------------------------------------------------------- hourly
     def set_targets(self, targets: Dict[Key, int],
@@ -132,7 +133,21 @@ class LTPolicy(ScalingPolicy):
         self._hour_start = now
         if self.mode != "I":
             return []
-        return []  # LT-I actuation happens in on_tick against live counts
+        # LT-I is *Immediate*: jump to the target the moment it arrives
+        # instead of deferring actuation to the next tick (a full tick
+        # of lag every hour).  Counts come from the last tick's views
+        # (at most one tick stale); on_tick keeps reconciling drift.
+        acts: List[ScaleAction] = []
+        for key, tgt in self.targets.items():
+            total = self._totals.get(key)
+            if total is None:
+                continue  # no view yet: first on_tick will actuate
+            tgt = max(tgt, self.min_instances)
+            if total != tgt:
+                acts.append(ScaleAction(key[0], key[1], tgt - total,
+                                        "lt-i target"))
+                self._totals[key] = tgt
+        return acts
 
     # ------------------------------------------------------------- ticks
     def on_tick(self, views: List[EndpointView], now: float
@@ -140,14 +155,18 @@ class LTPolicy(ScalingPolicy):
         acts: List[ScaleAction] = []
         for v in views:
             key = (v.model, v.region)
+            total = v.instances + v.pending
+            self._totals[key] = total
             if key not in self.targets:
                 continue
             target = max(self.targets[key], self.min_instances)
-            total = v.instances + v.pending
             if self.mode == "I":
                 if total != target:
                     acts.append(ScaleAction(v.model, v.region,
                                             target - total, "lt-i target"))
+                    # record the actuated count, or an hourly set_targets
+                    # landing before the next tick re-issues this delta
+                    self._totals[key] = target
                 continue
             if now - self._last.get(key, -1e18) < self.cooldown:
                 continue

@@ -16,6 +16,7 @@ import itertools
 import math
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
+from repro.control.cost import CostModel
 from repro.core.scaling import EndpointView, ScaleAction
 from repro.sim.instance import Instance
 from repro.sim.perfmodel import PerfProfile
@@ -178,7 +179,8 @@ class Cluster:
                  initial_instances: int = 20, spot_spare: int = 10,
                  pools: Tuple[str, ...] = ("unified",),
                  initial_per_pool: Optional[Dict[str, int]] = None,
-                 spot_retag_time: float = 600.0):
+                 spot_retag_time: float = 600.0,
+                 cost_model: Optional[CostModel] = None):
         # spot VMs donated to external (preemptible) customers are
         # redeployed with the customer's model after ~spot_retag_time;
         # reclaiming them then costs a full model redeploy (~10 min)
@@ -186,6 +188,8 @@ class Cluster:
         # churn therefore pays cold starts that rare, forecast-driven
         # scaling amortizes (Fig. 1 / §7.2.4 of the paper).
         self.spot_retag_time = spot_retag_time
+        self.cost_model = cost_model if cost_model is not None \
+            else CostModel()
         self.regions = regions
         self.models = models
         self.profiles = profiles
@@ -319,3 +323,11 @@ class Cluster:
 
     def spot_hours(self) -> Dict[str, float]:
         return {r: v / 3600.0 for r, v in self.spot_seconds.items()}
+
+    def gpu_dollars(self) -> Dict[Key, float]:
+        """Accrued instance-hours priced by the stack's ``CostModel``."""
+        return self.cost_model.dollars(self.instance_hours())
+
+    def wasted_dollars(self) -> Dict[Key, float]:
+        """Dollars spent on instances still provisioning (cold starts)."""
+        return self.cost_model.dollars(self.wasted_hours())

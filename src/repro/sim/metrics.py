@@ -35,6 +35,11 @@ class Report:
     util_trace: Dict[Key, List[Tuple[float, float, int]]]  # t, util, count
     retry_dropped: int = 0       # dropped after exhausting routing retries
     parked: int = 0              # still parked in the queue manager at end
+    # dollar accounting: instance-hours priced by the stack's CostModel
+    # (paper §7.2.1, α = $98.32/h by default)
+    gpu_dollars: Dict[Key, float] = dataclasses.field(default_factory=dict)
+    wasted_dollars: Dict[Key, float] = dataclasses.field(
+        default_factory=dict)
 
     # ------------------------------------------------------------ summaries
     def total_instance_hours(self) -> float:
@@ -45,6 +50,20 @@ class Report:
 
     def total_spot_hours(self) -> float:
         return sum(self.spot_hours.values())
+
+    def total_gpu_dollars(self) -> float:
+        return sum(self.gpu_dollars.values())
+
+    def total_wasted_dollars(self) -> float:
+        return sum(self.wasted_dollars.values())
+
+    def savings_vs(self, baseline: "Report") -> Dict[str, float]:
+        """Dollar savings relative to a baseline run of the same trace
+        (the paper's headline: LT-UA vs the reactive deployment)."""
+        base = baseline.total_gpu_dollars()
+        mine = self.total_gpu_dollars()
+        return {"dollars": base - mine,
+                "pct": 100.0 * (1.0 - mine / base) if base else 0.0}
 
     def summary(self) -> str:
         lines = [f"== {self.name} =="]
@@ -62,6 +81,10 @@ class Report:
             f"wasted={self.total_wasted_hours():.1f} "
             f"spot-donated={self.total_spot_hours():.1f} "
             f"scale-out={self.scale_out_events} in={self.scale_in_events}")
+        if self.gpu_dollars:
+            lines.append(
+                f"  gpu-dollars=${self.total_gpu_dollars():,.0f} "
+                f"wasted=${self.total_wasted_dollars():,.0f}")
         if self.retry_dropped or self.parked:
             lines.append(f"  retry-dropped={self.retry_dropped} "
                          f"parked={self.parked}")
@@ -93,6 +116,12 @@ def report_to_dict(rep: Report, include_util_trace: bool = True) -> Dict:
         "scale_in_events": rep.scale_in_events,
         "retry_dropped": rep.retry_dropped,
         "parked": rep.parked,
+        "gpu_dollars": {f"{m}|{r}": v
+                        for (m, r), v in rep.gpu_dollars.items()},
+        "wasted_dollars": {f"{m}|{r}": v
+                           for (m, r), v in rep.wasted_dollars.items()},
+        "gpu_dollars_total": rep.total_gpu_dollars(),
+        "wasted_dollars_total": rep.total_wasted_dollars(),
     }
     if include_util_trace:
         d["util_trace"] = {f"{m}|{r}": [[t, u, c] for (t, u, c) in tr]
@@ -147,4 +176,6 @@ def build_report(name: str, requests: Sequence[Request], cluster,
         scale_out_events=cluster.scale_out_events,
         scale_in_events=cluster.scale_in_events,
         util_trace=util_trace,
-        retry_dropped=retry_dropped, parked=parked)
+        retry_dropped=retry_dropped, parked=parked,
+        gpu_dollars=cluster.gpu_dollars(),
+        wasted_dollars=cluster.wasted_dollars())

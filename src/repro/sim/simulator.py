@@ -26,10 +26,12 @@ import heapq
 import itertools
 import math
 from collections import defaultdict
+from collections.abc import Mapping
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.api.plan import Plan
 from repro.api.registry import resolve
 from repro.api.signals import BacklogSignal
 from repro.core.scaling import EndpointView, ScaleAction, ScalingPolicy
@@ -44,6 +46,29 @@ from repro.sim.tps import TpsHistory
 from repro.sim.types import Request, TIER_NIW
 
 Key = Tuple[str, str]
+
+
+class _RegionUtils(Mapping):
+    """Live, lazy per-region utilization view handed to per-request
+    routers: utilization is computed only for the regions the router
+    actually inspects, so a plan hit touches one endpoint instead of
+    building the full utils dict per arrival (the fallback paths that
+    iterate or ``dict()`` it still see every region)."""
+
+    __slots__ = ("_eps", "_regions")
+
+    def __init__(self, eps: Dict[str, object], regions: Sequence[str]):
+        self._eps = eps
+        self._regions = regions
+
+    def __getitem__(self, region: str) -> float:
+        return self._eps[region].util
+
+    def __iter__(self):
+        return iter(self._regions)
+
+    def __len__(self) -> int:
+        return len(self._regions)
 
 
 @dataclasses.dataclass
@@ -79,6 +104,9 @@ class SimConfig:
     # Runs shorter than the lookback see bit-identical history to the
     # old unbounded accounting.
     history_lookback: float = 8 * 86400.0
+    # dollar accounting: CostModel pricing instance-hours in the Report;
+    # None → the paper's flat α = $98.32/h
+    cost_model: Optional[object] = None
 
 
 class Simulation:
@@ -105,7 +133,8 @@ class Simulation:
         self.cluster = Cluster(self.regions, self.models, self.profiles,
                                order_fn, pools=pools,
                                initial_per_pool=per_pool,
-                               spot_spare=cfg.spot_spare)
+                               spot_spare=cfg.spot_spare,
+                               cost_model=cfg.cost_model)
         # per-(model, pool) region → endpoint map for the routing hot path
         self._region_eps: Dict[Tuple[str, str], Dict[str, object]] = {
             (m, pool): {r: self.cluster.endpoint(m, r, pool)
@@ -142,6 +171,19 @@ class Simulation:
         # wins, so the per-arrival utils map can be skipped entirely
         home_thr = getattr(self.router, "home_threshold", None)
         self._home_thr = home_thr() if callable(home_thr) else None
+        # plan-aware routers advertise per-request deterministic routing
+        # (hash-based ω splitting) and a plan feed — both duck-typed so
+        # the threshold-router hot path stays untouched
+        rr = getattr(self.router, "route_request", None)
+        self._route_request = rr if callable(rr) else None
+        up = getattr(self.router, "update_plan", None)
+        self._router_update_plan = up if callable(up) else None
+        # reused per-arrival routing inputs: lazy utils views per
+        # (model, pool) and one preference list per home region
+        self._lazy_utils = {k: _RegionUtils(v, self.regions)
+                            for k, v in self._region_eps.items()}
+        self._prefs = {r: [r] + [x for x in self.regions if x != r]
+                       for r in self.regions}
         # policies may advertise a cheap pre-check (cooldown) that
         # predicts on_request cannot act, skipping the view build
         gate = getattr(cfg.policy, "wants_request_view", None)
@@ -197,15 +239,23 @@ class Simulation:
         else:
             region = req.region
             ep = eps[region]
-            thr = self._home_thr
-            if thr is None or ep.util >= thr:
-                utils = {r: eps[r].util for r in self.regions}
-                pref = [region] + [r for r in self.regions
-                                   if r != region]
-                routed = self.router.route(utils, pref)
+            rr = self._route_request
+            if rr is not None:
+                routed = rr(req, self._lazy_utils[(req.model, pool)],
+                            self._prefs[region])
                 if routed != region:
                     region = routed
                     ep = eps[region]
+            else:
+                thr = self._home_thr
+                if thr is None or ep.util >= thr:
+                    utils = {r: eps[r].util for r in self.regions}
+                    pref = [region] + [r for r in self.regions
+                                       if r != region]
+                    routed = self.router.route(utils, pref)
+                    if routed != region:
+                        region = routed
+                        ep = eps[region]
         inst = ep.pick_jsq()
         if inst is None:
             # endpoint has zero live instances: exponential backoff, then
@@ -436,8 +486,15 @@ class Simulation:
         for (m, r, pool), ep in self.cluster.endpoints.items():
             instances[(m, r)] = instances.get((m, r), 0) + \
                 ep.live_count() + len(ep.pending)
-        targets, forecasts = cfg.controller.plan(
+        plan = cfg.controller.plan(
             self.now, instances, self.history_series(), self.niw_last_hour())
-        acts = cfg.policy.set_targets(targets, forecasts, self.now)
+        if isinstance(plan, tuple):
+            # legacy planners return a bare (targets, forecasts) pair
+            targets, forecasts = plan
+            plan = Plan(t=self.now, targets=targets, forecasts=forecasts)
+        acts = cfg.policy.set_targets(plan.targets, plan.forecasts,
+                                      self.now)
         if acts:
             self._apply_actions(acts)
+        if self._router_update_plan is not None:
+            self._router_update_plan(plan, self.now)

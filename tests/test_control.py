@@ -1,0 +1,384 @@
+"""The co-optimized control plane (repro.control): batched forecasting,
+routing-aware ILP plans, plan-aware routing, dollar-cost accounting.
+
+Batched-vs-serial fit equivalence is asserted at a moderate step count:
+the CSS/Adam trajectory is chaotically sensitive (an MA term through a
+~1400-step recurrence), so float-level kernel differences between the
+vmap'd and serial paths amplify exponentially with optimization steps —
+at 50 steps the paths agree to ~1e-3, which pins the math; at
+production step counts the two land in equally-good but different
+optima, which the quality-parity test covers instead.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import Plan, PolicySpec, RoutingPlan, StackSpec, build_stack
+from repro.control import (BatchForecastEngine, CostModel, PlanAwareRouter,
+                           SageServeController, solve, solve_with_routing)
+from repro.control.planner import ControllerConfig
+from repro.control.provision import ProvisionProblem
+from repro.core.scaling import LTPolicy
+from repro.sim.simulator import SimConfig, Simulation
+from repro.sim.workload import PAPER_MODELS, REGIONS, WorkloadSpec, generate
+
+KEYS = [(m, r) for m in ("a", "b", "c", "d") for r in ("e", "w", "c")]
+
+
+def _sine_history(n=2880, period=1440, noise=10.0, seed=0, keys=KEYS):
+    """period > 0: diurnal sine; period == 0: gentle trend only."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n, dtype=float)
+    cycle = (np.sin(2 * np.pi * t / period) if period
+             else 0.0005 * t)
+    return {k: (800 + 300 * np.roll(np.atleast_1d(cycle), 37 * i)
+                if period else
+                800 + 300 * cycle + 2.0 * i)
+            + rng.normal(0, noise, t.shape)
+            for i, k in enumerate(keys)}
+
+
+# ------------------------------------------------------- batched forecasting
+def test_batched_matches_serial_within_tolerance():
+    hist = _sine_history(n=600, period=0)
+    eng = BatchForecastEngine(2, 1, 1, fit_steps=50, warm_start=False)
+    fb = eng.fit_forecast(hist, 30)
+    fs = eng.fit_forecast_serial(hist, 30)
+    assert set(fb) == set(fs) == set(hist)
+    for k in KEYS:
+        scale = max(float(np.mean(np.abs(fs[k]))), 1.0)
+        np.testing.assert_allclose(fb[k] / scale, fs[k] / scale, atol=5e-2)
+
+
+def test_batched_quality_parity_at_production_steps():
+    """At full step counts the paths may reach different optima; both
+    must still beat naive persistence on a diurnal series."""
+    period = 288
+    hist = _sine_history(n=3 * period, period=period, keys=KEYS[:3])
+    truth = _sine_history(n=4 * period, period=period, noise=0.0,
+                          keys=KEYS[:3])
+    eng = BatchForecastEngine(2, 1, 1, seasonal_period=period,
+                              fit_steps=200, warm_start=False)
+    for out in (eng.fit_forecast(hist, period // 4),
+                eng.fit_forecast_serial(hist, period // 4)):
+        for k, fc in out.items():
+            want = truth[k][3 * period:3 * period + period // 4]
+            mape = np.mean(np.abs(fc - want) / np.abs(want))
+            naive = np.mean(np.abs(hist[k][-1] - want) / np.abs(want))
+            assert mape < 0.2 and mape < naive, k
+
+
+def test_batched_skips_short_series_and_warm_starts():
+    hist = _sine_history(n=400, period=0, keys=KEYS[:4])
+    hist[("short", "x")] = np.ones(3)
+    eng = BatchForecastEngine(2, 1, 1, fit_steps=40)
+    out = eng.fit_forecast(hist, 10)
+    assert ("short", "x") not in out
+    assert set(out) == set(KEYS[:4])
+    assert set(eng._warm) == set(KEYS[:4])
+    batches_before = eng.batches
+    out2 = eng.fit_forecast(hist, 10)
+    assert eng.batches == batches_before + 1      # one dispatch per hour
+    for k in KEYS[:4]:
+        assert np.isfinite(out2[k]).all()
+
+
+def test_fit_length_quantized_to_bound_jit_retraces():
+    """Growing hourly histories must map to a bounded set of fit
+    lengths (quantum steps up to the cap), or every hourly plan pays a
+    fresh JIT trace."""
+    eng = BatchForecastEngine(2, 1, 1, seasonal_period=1440)
+    lens = {eng._fit_len(n) for n in range(60, 20000, 60)}
+    assert max(lens) == 2 * 1440                  # capped at two periods
+    assert all(n == 2 * 1440 or n % eng.length_quantum == 0 or n < 256
+               for n in lens)
+    assert len(lens) <= 20                        # bounded, not per-hour
+    # the fit consumes the quantized suffix on both paths
+    hist = {("a", "x"): np.sin(np.arange(300) / 20.0) + 2}
+    out_b = BatchForecastEngine(2, 1, 1, fit_steps=40).fit_forecast(
+        hist, 8)
+    out_s = BatchForecastEngine(2, 1, 1, fit_steps=40) \
+        .fit_forecast_serial(hist, 8)
+    np.testing.assert_allclose(out_b[("a", "x")], out_s[("a", "x")],
+                               rtol=0.05, atol=0.05)
+
+
+def test_batched_handles_ragged_lengths():
+    hist = {("a", "x"): np.sin(np.arange(300) / 20.0) + 2,
+            ("b", "y"): np.sin(np.arange(500) / 20.0) + 2}
+    eng = BatchForecastEngine(2, 1, 1, fit_steps=40)
+    out = eng.fit_forecast(hist, 12)
+    assert set(out) == set(hist)
+    for fc in out.values():
+        assert fc.shape == (12,) and (fc >= 0).all()
+
+
+def test_seasonal_engine_picks_up_daily_cycle():
+    """Two days of a daily sine at 60 s buckets: the seasonal fit must
+    track the cycle into the next hour, beating last-value persistence
+    (the satellite criterion for the seasonal_period default)."""
+    period = 1440
+    t = np.arange(2 * period, dtype=float)
+    rng = np.random.default_rng(3)
+    y = 500 + 400 * np.sin(2 * np.pi * t / period) + rng.normal(0, 5.0,
+                                                                t.shape)
+    eng = BatchForecastEngine(2, 1, 1, seasonal_period=period,
+                              fit_steps=80)
+    fc = eng.fit_forecast({("m", "r"): y}, 60)[("m", "r")]
+    tf = np.arange(2 * period, 2 * period + 60, dtype=float)
+    want = 500 + 400 * np.sin(2 * np.pi * tf / period)
+    mape = np.mean(np.abs(fc - want) / np.abs(want))
+    naive = np.mean(np.abs(y[-1] - want) / np.abs(want))
+    assert mape < 0.1
+    assert mape < naive
+
+
+def test_seasonal_default_plumbed_through_build_stack():
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                     scaler="lt-ua", planner="sageserve")
+    assert build_stack(spec).planner.cfg.seasonal_period == 1440
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+                     planner="sageserve", history_lookback=86400.0)
+    # lookback shorter than two days: capped so two periods still fit
+    assert build_stack(spec).planner.cfg.seasonal_period == 720
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+                     planner=PolicySpec("sageserve",
+                                        {"seasonal_period": 7}))
+    assert build_stack(spec).planner.cfg.seasonal_period == 7
+
+
+# ------------------------------------------------------------- routing ILP
+def _problem(seed, l=3, r=3, g=1):
+    rng = np.random.default_rng(seed)
+    return ProvisionProblem(
+        n=rng.integers(2, 12, (l, r, g)).astype(float),
+        theta=rng.uniform(800, 4000, (l, g)),
+        alpha=rng.uniform(50, 120, (g,)),
+        sigma=rng.uniform(5, 30, (l, g)),
+        rho_peak=rng.uniform(2000, 40000, (l, r)),
+        epsilon=0.8, region_cap=np.full(r, 600.0), min_instances=2)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_routing_ilp_invariants(seed):
+    prob = _problem(seed)
+    sol = solve_with_routing(prob)
+    assert sol.status in ("optimal", "feasible")
+    l, r, g = prob.n.shape
+    omega = sol.omega
+    assert omega.shape == (l, r, r)
+    assert (omega >= -1e-6).all()
+    np.testing.assert_allclose(omega.sum(axis=2), 1.0, atol=1e-6)
+    # home minimum ε
+    for i in range(l):
+        for j in range(r):
+            assert omega[i, j, j] >= prob.epsilon - 1e-6
+    # routed load fits post-scaling capacity
+    npost = prob.n + sol.delta
+    cap = np.einsum("irk,ik->ir", npost, prob.theta)
+    inbound = np.einsum("ij,ijp->ip", prob.rho_peak, omega)
+    assert (inbound <= cap + 1e-4).all()
+    assert np.allclose(sol.delta, np.round(sol.delta))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_routing_ilp_never_buys_more_than_myopic(seed):
+    """Every myopic-feasible δ stays feasible once spill is explicit
+    (route ε home, transport the rest), so with λ = 0 the co-optimized
+    instance cost can never exceed the myopic optimum; with λ > 0 it
+    can exceed it by at most λ · (1-ε) · Σρ (the worst-case spill the
+    feasibility argument pays for)."""
+    prob = _problem(seed)
+
+    def instance_cost(sol):
+        pos = np.maximum(sol.delta, 0.0)
+        return (float((prob.alpha * sol.delta.sum(axis=(0, 1))).sum())
+                + float((np.asarray(prob.sigma)[:, None, :] * pos).sum()))
+
+    myopic = instance_cost(solve(prob))
+    tol = max(1e-6, 1e-3 * abs(myopic))        # the MIP's own rel gap
+    free = instance_cost(solve_with_routing(prob, spill_cost_per_tps=0.0))
+    assert free <= myopic + tol
+    lam = 1e-3
+    slack = lam * (1 - prob.epsilon) * float(prob.rho_peak.sum())
+    priced = instance_cost(solve_with_routing(prob,
+                                              spill_cost_per_tps=lam))
+    assert priced <= myopic + slack + tol
+
+
+def test_routing_plan_fractions_from_planner():
+    cfg = ControllerConfig(
+        models=["a", "b"], regions=["e", "w"],
+        theta={"a": 1000.0, "b": 1500.0}, fit_steps=30,
+        use_routing=True, min_instances=1)
+    ctl = SageServeController(cfg)
+    hist = _sine_history(n=300, period=0,
+                         keys=[(m, r) for m in ("a", "b")
+                               for r in ("e", "w")])
+    plan = ctl.plan(3600.0, {(m, r): 4 for m in ("a", "b")
+                             for r in ("e", "w")}, hist, {})
+    assert isinstance(plan, Plan)
+    assert plan.status in ("optimal", "feasible")
+    assert set(plan.targets) == {(m, r) for m in ("a", "b")
+                                 for r in ("e", "w")}
+    assert plan.routing is not None
+    plan.routing.validate()
+    for key, fr in plan.routing.fractions.items():
+        assert abs(sum(fr.values()) - 1.0) < 1e-3
+        assert fr.get(key[1], 0.0) >= cfg.epsilon - 1e-3
+
+
+# --------------------------------------------------------- PlanAwareRouter
+def _mkplan(fractions, t=0.0):
+    return Plan(t=t, targets={}, forecasts={},
+                routing=RoutingPlan(fractions=fractions))
+
+
+class _Req:
+    def __init__(self, rid, model="m", region="a", arrival=0.0):
+        self.rid, self.model, self.region = rid, model, region
+        self.arrival = arrival
+
+
+def test_plan_router_deterministic_and_converges_to_fractions():
+    router = PlanAwareRouter()
+    router.update_plan(_mkplan({("m", "a"): {"a": 0.6, "b": 0.4}}), 0.0)
+    utils = {"a": 0.2, "b": 0.2}
+    got = [router.route_request(_Req(i), utils, ["a", "b"])
+           for i in range(4000)]
+    again = [router.route_request(_Req(i), utils, ["a", "b"])
+             for i in range(4000)]
+    assert got == again                       # deterministic in rid
+    frac_b = got.count("b") / len(got)
+    assert abs(frac_b - 0.4) < 0.03           # realizes the ω split
+    assert router.plan_routed > 0 and router.fallback_routed == 0
+
+
+def test_plan_router_fallbacks():
+    router = PlanAwareRouter(threshold=0.7)
+    utils = {"a": 0.9, "b": 0.1}
+    # no plan yet: pure threshold routing
+    assert router.route_request(_Req(0), utils, ["a", "b"]) == "b"
+    router.update_plan(_mkplan({("m", "a"): {"b": 1.0}}), 0.0)
+    # planned region drained away entirely
+    assert router.route_request(_Req(1, arrival=10.0), {"a": 0.2},
+                                ["a", "b"]) == "a"
+    # planned region saturated
+    assert router.route_request(_Req(2, arrival=10.0),
+                                {"a": 0.2, "b": 0.99}, ["a", "b"]) == "a"
+    # stale plan (default: two horizons past t)
+    late = _Req(3, arrival=3 * 3600.0)
+    assert router.route_request(late, {"a": 0.2, "b": 0.1},
+                                ["a", "b"]) == "a"
+    # unknown key falls back too
+    other = _Req(4, model="other", arrival=10.0)
+    assert router.route_request(other, {"a": 0.2, "b": 0.1},
+                                ["a", "b"]) == "a"
+    assert router.plan_routed == 0 and router.fallback_routed == 5
+
+
+def test_plan_router_in_simulation_consumes_plan():
+    trace = generate(WorkloadSpec(days=0.1, scale=0.02, seed=4))
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+                     planner=PolicySpec("sageserve",
+                                        {"fit_steps": 40,
+                                         "use_routing": True}),
+                     router="plan", initial_instances=3, spot_spare=8,
+                     drain_grace=2 * 3600.0)
+    stack = build_stack(spec)
+    rep = stack.simulate(trace, name="plan-sim")
+    done = sum(1 for r in trace if not math.isnan(r.e2e))
+    assert done / len(trace) > 0.97
+    assert stack.router.plan is not None          # hourly feed arrived
+    assert stack.router.plan_routed > 0
+    assert stack.planner.last_plan.routing is not None
+
+
+def test_simulator_accepts_legacy_tuple_planner():
+    class TuplePlanner:
+        calls = 0
+
+        def plan(self, now, instances, history, niw):
+            TuplePlanner.calls += 1
+            return ({k: 3 for k in instances},
+                    {k: 100.0 for k in instances})
+
+    trace = generate(WorkloadSpec(days=0.06, scale=0.01, seed=5))
+    cfg = SimConfig(policy=LTPolicy(mode="UA"), controller=TuplePlanner(),
+                    initial_instances=3, spot_spare=8,
+                    drain_grace=2 * 3600.0)
+    Simulation(trace, cfg, name="legacy").run()
+    assert TuplePlanner.calls > 0
+
+
+# ------------------------------------------------------------ dollar costs
+def test_cost_model_rates_and_dict_roundtrip():
+    cm = CostModel(alpha=10.0, rates={"big": 40.0})
+    assert cm.rate("big") == 40.0 and cm.rate("small") == 10.0
+    assert cm.dollars({("big", "e"): 2.0, ("small", "w"): 3.0}) == {
+        ("big", "e"): 80.0, ("small", "w"): 30.0}
+    assert CostModel.from_dict(cm.to_dict()) == cm
+
+
+def test_report_cost_fields_roundtrip():
+    from repro.sim.metrics import report_to_dict
+    trace = generate(WorkloadSpec(days=0.06, scale=0.01, seed=6))
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                     scaler="reactive", initial_instances=3, spot_spare=8,
+                     drain_grace=2 * 3600.0, cost_alpha=10.0,
+                     cost_rates={PAPER_MODELS[0]: 40.0})
+    rep = build_stack(spec).simulate(trace, name="cost")
+    assert set(rep.gpu_dollars) == set(rep.instance_hours)
+    for (m, r), h in rep.instance_hours.items():
+        rate = 40.0 if m == PAPER_MODELS[0] else 10.0
+        assert rep.gpu_dollars[(m, r)] == pytest.approx(h * rate)
+        assert rep.wasted_dollars[(m, r)] == pytest.approx(
+            rep.wasted_hours[(m, r)] * rate)
+    assert rep.total_gpu_dollars() > 0
+    assert f"${rep.total_gpu_dollars():,.0f}" in rep.summary()
+    d = json.loads(json.dumps(report_to_dict(rep)))
+    assert d["gpu_dollars_total"] == pytest.approx(rep.total_gpu_dollars())
+    assert d["gpu_dollars"][f"{PAPER_MODELS[0]}|{REGIONS[0]}"] == \
+        pytest.approx(rep.gpu_dollars[(PAPER_MODELS[0], REGIONS[0])])
+    # savings helper: identical runs → zero savings
+    sav = rep.savings_vs(rep)
+    assert sav["dollars"] == pytest.approx(0.0)
+    assert sav["pct"] == pytest.approx(0.0)
+
+
+# -------------------------------------------------------- LT-I actuation
+def test_lt_i_actuates_immediately_on_set_targets():
+    """Regression (time-to-target): LT-I used to defer every hourly
+    target to the next tick — a full tick of actuation lag."""
+    p = LTPolicy(mode="I")
+    from repro.core.scaling import EndpointView
+    view = EndpointView("m", "r", 0.5, 4, 0, 0.0)
+    assert p.on_tick([view], now=0.0) == []        # no targets yet
+    acts = p.set_targets({("m", "r"): 7}, {("m", "r"): 1000.0}, now=5.0)
+    assert len(acts) == 1 and acts[0].delta == 3   # immediate, not next tick
+    # next tick sees the actuated fleet: no double-scaling
+    view2 = EndpointView("m", "r", 0.5, 7, 0, 0.0)
+    assert p.on_tick([view2], now=15.0) == []
+    # re-announcing the same target is a no-op
+    assert p.set_targets({("m", "r"): 7}, {("m", "r"): 1000.0},
+                         now=20.0) == []
+    # LT-U keeps deferring to utilization breaches
+    u = LTPolicy(mode="U")
+    u.on_tick([view], now=0.0)
+    assert u.set_targets({("m", "r"): 7}, {("m", "r"): 1000.0},
+                         now=5.0) == []
+
+
+def test_plan_dataclass_cumulative_and_stale():
+    rp = RoutingPlan({("m", "a"): {"a": 0.8, "b": 0.15, "c": 0.05}})
+    cum = rp.cumulative(("m", "a"))
+    assert cum[0] == (pytest.approx(0.8), "a")     # home region first
+    assert cum[-1][0] >= 1.0
+    assert rp.cumulative(("m", "zzz")) is None
+    plan = Plan(t=0.0, targets={}, forecasts={}, horizon=3600.0)
+    assert not plan.stale(7000.0)
+    assert plan.stale(7300.0)
+    with pytest.raises(ValueError):
+        RoutingPlan({("m", "a"): {"a": 0.5}}).validate()

@@ -24,6 +24,28 @@ def test_bnb_matches_milp_small(seed):
         assert (A @ r2.x <= b + 1e-6).all()
 
 
+@pytest.mark.parametrize("seed", range(5))
+def test_bnb_and_milp_report_comparable_relative_gaps(seed):
+    """Regression: the bnb gap used to be absolute while milp stops on
+    ``mip_rel_gap`` — both now report a relative gap, so status/gap
+    agree across backends on instances both solve to optimality."""
+    rng = np.random.default_rng(100 + seed)
+    n = 6
+    c = rng.uniform(-5, 5, n)
+    A = rng.uniform(-1, 3, (4, n))
+    b = rng.uniform(5, 20, 4)
+    bounds = [(0, 10)] * n
+    r_milp = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="milp")
+    r_bnb = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="bnb",
+                      max_nodes=5000)
+    for r in (r_milp, r_bnb):
+        assert np.isfinite(r.gap)
+        assert 0.0 <= r.gap <= 1e-3          # relative, inside milp's tol
+    if r_milp.status == r_bnb.status == "optimal":
+        denom = max(1.0, abs(r_milp.objective))
+        assert abs(r_milp.objective - r_bnb.objective) / denom <= 2e-3
+
+
 def test_infeasible_detected():
     c = np.array([1.0])
     A = np.array([[1.0], [-1.0]])
