@@ -1,0 +1,133 @@
+"""Placement study: the third control knob under stress scenarios.
+
+Compares the placement-aware plan (ILP y binaries + staged lead-time
+actuation) against the placement-blind co-optimized plan (PR 3's
+``lt-ua+plan``) on the scenarios placement exists for:
+
+- ``outage``      — a region goes dark for three hours; the forecast-
+                    aware planner evacuates at the outage start (not a
+                    planning period early) and redeploys afterwards;
+- ``popshift``    — hour-indexed model-popularity shift: one model's
+                    demand vanishes in one region and doubles in
+                    another, so static all-models-everywhere placement
+                    pays idle min-instance floors forever;
+- ``combined``    — both at once (the default study).
+
+Reported: total ``gpu_dollars`` per strategy (the paper's §7.2.1
+accounting), the dollar delta, and per-tier IW SLA-violation fractions
+— the acceptance gate is "placement saves dollars without giving up IW
+SLA attainment".
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import csv_line, reset_trace
+from repro.api import (OutageWindow, PolicySpec, ScenarioSpec, StackSpec,
+                       build_stack)
+from repro.sim.workload import (PAPER_MODELS, REGIONS, PopularityShift,
+                                WorkloadSpec, generate)
+
+SCENARIOS = ("outage", "popshift", "combined")
+
+
+def scenario_inputs(name: str, days: float, scale: float, seed: int = 7):
+    """Trace + ScenarioSpec for one named scenario."""
+    shifts = ()
+    outages = ()
+    if name in ("popshift", "combined"):
+        # bloom's demand leaves westus and doubles in eastus from hour 4
+        shifts = (
+            PopularityShift("bloom-176b", 4.0, 24.0 * days, 0.0,
+                            regions=("westus",)),
+            PopularityShift("bloom-176b", 4.0, 24.0 * days, 2.0,
+                            regions=("eastus",)),
+        )
+    if name in ("outage", "combined"):
+        outages = (OutageWindow("centralus", 6 * 3600.0, 9 * 3600.0),)
+    trace = generate(WorkloadSpec(days=days, scale=scale, seed=seed,
+                                  pop_shifts=shifts))
+    return trace, ScenarioSpec(outages=outages)
+
+
+def run_pair(trace, scen: ScenarioSpec, fit_steps: int = 40,
+             initial_instances: int = 3, spot_spare: int = 8):
+    """One placement-blind and one placement-aware run over the same
+    trace/scenario; returns (blind_report, aware_report)."""
+    out = []
+    for aware in (False, True):
+        reset_trace(trace)
+        kw = {"fit_steps": fit_steps, "use_routing": True}
+        if aware:
+            kw["use_placement"] = True
+        spec = StackSpec(
+            models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+            planner=PolicySpec("sageserve", kw), router="plan",
+            initial_instances=initial_instances, spot_spare=spot_spare,
+            drain_grace=2 * 3600.0, scenario=scen)
+        out.append(build_stack(spec).simulate(
+            trace, name="place" if aware else "blind"))
+    return out[0], out[1]
+
+
+def run(quick: bool = False, scenarios=SCENARIOS) -> None:
+    days, scale = (0.3, 0.015) if quick else (0.5, 0.03)
+    for scen_name in scenarios:
+        trace, scen = scenario_inputs(scen_name, days, scale)
+        blind, place = run_pair(trace, scen)
+        done = sum(1 for r in trace if not math.isnan(r.e2e))
+        csv_line(f"fig_placement.{scen_name}.requests", len(trace),
+                 f"{done / max(len(trace), 1):.3f} completed (aware)")
+        csv_line(f"fig_placement.{scen_name}.gpu_dollars.blind",
+                 round(blind.total_gpu_dollars(), 2))
+        csv_line(f"fig_placement.{scen_name}.gpu_dollars.aware",
+                 round(place.total_gpu_dollars(), 2))
+        sav = place.savings_vs(blind)
+        csv_line(f"fig_placement.{scen_name}.savings_dollars",
+                 round(sav["dollars"], 2), f"{sav['pct']:.1f}%")
+        for tier in ("IW-F", "IW-N"):
+            csv_line(
+                f"fig_placement.{scen_name}.sla_viol.{tier}",
+                round(place.sla_violations.get(tier, 0.0), 4),
+                f"blind {blind.sla_violations.get(tier, 0.0):.4f}")
+    print("# fig_placement complete", flush=True)
+
+
+def smoke() -> int:
+    """Tiny outage + popularity-shift run for CI (scripts/check.sh):
+    placement-aware must at least match the blind plan on dollars and
+    stay near its IW SLA attainment."""
+    import sys
+    trace, scen = scenario_inputs("combined", days=0.3, scale=0.015)
+    blind, place = run_pair(trace, scen)
+    done = sum(1 for r in trace if not math.isnan(r.e2e))
+    frac = done / max(len(trace), 1)
+    csv_line("placement_smoke.completion", round(frac, 4))
+    csv_line("placement_smoke.gpu_dollars.blind",
+             round(blind.total_gpu_dollars(), 2))
+    csv_line("placement_smoke.gpu_dollars.aware",
+             round(place.total_gpu_dollars(), 2))
+    if frac < 0.97:
+        print(f"FAILED placement smoke: completion {frac:.1%}",
+              file=sys.stderr)
+        return 1
+    if place.total_gpu_dollars() > blind.total_gpu_dollars():
+        print("FAILED placement smoke: placement-aware spent more than "
+              "placement-blind", file=sys.stderr)
+        return 1
+    for tier in ("IW-F", "IW-N"):
+        b = blind.sla_violations.get(tier, 0.0)
+        p = place.sla_violations.get(tier, 0.0)
+        if p > b + 0.02:
+            print(f"FAILED placement smoke: {tier} SLA violations "
+                  f"{p:.3f} exceed blind {b:.3f} + 2pp", file=sys.stderr)
+            return 1
+    print("# placement smoke ok", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        sys.exit(smoke())
+    run(quick="--quick" in sys.argv)

@@ -56,6 +56,9 @@ def main(argv=None) -> int:
                     help="tiny <60s strategy sweep for CI")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="run the placement study on one stress "
+                         "scenario (outage | popshift | combined)")
     ap.add_argument("--bench-out", default=None, metavar="BENCH_sim.json",
                     help="also run the simulator perf benchmark "
                          "(benchmarks.perf_sim) and write its JSON here")
@@ -66,11 +69,23 @@ def main(argv=None) -> int:
             from benchmarks import perf_sim
             perf_sim.bench(repeats=1, out=args.bench_out)
         return rc
+    if args.scenario:
+        from benchmarks import fig_placement
+        if args.scenario not in fig_placement.SCENARIOS:
+            print(f"unknown scenario {args.scenario!r}; known: "
+                  f"{', '.join(fig_placement.SCENARIOS)}",
+                  file=sys.stderr)
+            return 2
+        print("name,value,derived", flush=True)
+        fig_placement.run(quick=args.quick,
+                          scenarios=(args.scenario,))
+        return 0
 
     from benchmarks import (fig8_unified_vs_siloed, fig11_instance_hours,
                             fig14_scalability_moe, fig15_schedulers,
-                            fig16_bursts_week, fig_ablation, kernel_bench,
-                            perf_sim, tab3_workload_characterization,
+                            fig16_bursts_week, fig_ablation,
+                            fig_placement, kernel_bench, perf_sim,
+                            tab3_workload_characterization,
                             tab_ilp_solver)
     benches = {
         "tab3_workload_characterization": tab3_workload_characterization,
@@ -82,6 +97,7 @@ def main(argv=None) -> int:
         "fig15_schedulers": fig15_schedulers,
         "fig16_bursts_week": fig16_bursts_week,
         "fig_ablation": fig_ablation,
+        "fig_placement": fig_placement,
         "perf_sim": perf_sim,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -25,4 +25,7 @@ python -m benchmarks.perf_sim --smoke
 echo "== control probe (one hourly plan: batched forecast + ILP) =="
 python -m benchmarks.perf_sim --control
 
+echo "== placement smoke (tiny outage + popularity-shift scenario) =="
+python -m benchmarks.fig_placement --smoke
+
 echo "== check.sh OK =="

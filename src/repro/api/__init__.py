@@ -6,21 +6,24 @@ import them to register components); the stack builder — which imports
 the simulator and the core built-ins — loads lazily on first access of
 ``build_stack`` / ``ServingStack`` / ``simulate``.
 """
-from repro.api.plan import Plan, RoutingPlan
+from repro.api.plan import (PlacementAction, PlacementPlan,
+                            PlacementState, Plan, RoutingPlan)
 from repro.api.protocols import (Forecaster, GlobalPlanner, QueuePolicy,
                                  RequestLike, Router, Scaler, Scheduler)
 from repro.api.registry import known, register, resolve
 from repro.api.signals import BacklogSignal, Signal, UtilizationSignal
-from repro.api.spec import PolicySpec, StackSpec
+from repro.api.spec import (OutageWindow, PolicySpec, ScenarioSpec,
+                            StackSpec)
 
 _LAZY = ("BuildContext", "ServingStack", "build_stack", "simulate")
 
 __all__ = [
     "BacklogSignal", "BuildContext", "Forecaster", "GlobalPlanner",
+    "OutageWindow", "PlacementAction", "PlacementPlan", "PlacementState",
     "Plan", "PolicySpec", "QueuePolicy", "RequestLike", "Router",
-    "RoutingPlan", "Scaler", "Scheduler", "ServingStack", "Signal",
-    "StackSpec", "UtilizationSignal", "build_stack", "known", "register",
-    "resolve", "simulate",
+    "RoutingPlan", "Scaler", "ScenarioSpec", "Scheduler", "ServingStack",
+    "Signal", "StackSpec", "UtilizationSignal", "build_stack", "known",
+    "register", "resolve", "simulate",
 ]
 
 

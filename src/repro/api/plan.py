@@ -1,12 +1,15 @@
-"""The hourly control-plane ``Plan``: one object co-optimizing scaling
-and cross-region routing (paper §5–§6).
+"""The hourly control-plane ``Plan``: one object co-optimizing scaling,
+cross-region routing and model placement (paper §5–§6).
 
 A ``GlobalPlanner`` emits a ``Plan`` every hour: per-(model, region)
 instance **targets** (the ILP's n+δ), the peak **forecasts** they were
 derived from, an optional ``RoutingPlan`` of cross-region traffic
-fractions (the ILP's spill variables ω), and the solver's objective in
-dollars.  Scalers actuate the targets at their own pace; a plan-aware
-router splits traffic by the fractions until the plan goes stale.
+fractions (the ILP's spill variables ω), an optional ``PlacementPlan``
+of which models are deployed where (the ILP's y binaries, with
+per-decision lead times), and the solver's objective in dollars.
+Scalers actuate the targets at their own pace; a plan-aware router
+splits traffic by the fractions until the plan goes stale; the cluster
+actuates placement actions at their staged ``effective_at`` times.
 
 Plain data — no JAX, no simulator imports — so every layer (api, sim,
 benchmarks, live serving) can pass plans around freely.
@@ -14,7 +17,7 @@ benchmarks, live serving) can pass plans around freely.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 Key = Tuple[str, str]  # (model, region)
 
@@ -61,14 +64,78 @@ class RoutingPlan:
                     f"RoutingPlan[{key}]: fractions sum to {total}, not 1")
 
 
+@dataclasses.dataclass(frozen=True)
+class PlacementAction:
+    """One staged model-placement decision.
+
+    Placement has higher lead times than VM scaling (§5): a deploy
+    issued at ``issued_at`` is only live at ``effective_at = issued_at
+    + lead_time`` (warm spot retag ≪ cold local load ≪ remote weight
+    fetch).  Undeploys drain immediately (lead 0) and retag the freed
+    spot VMs with the model for cheap future swaps."""
+
+    model: str
+    region: str
+    deploy: bool          # True → deploy, False → undeploy (drain)
+    issued_at: float      # plan time (sim s)
+    lead_time: float      # actuation lead (s); 0 for undeploys
+
+    @property
+    def effective_at(self) -> float:
+        return self.issued_at + self.lead_time
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    """Which models are deployed in which region (the ILP's y_{m,j}
+    binaries) plus the staged transition actions.  ``placed`` is the
+    *target* placement for the plan's hour; keys absent from it default
+    to placed (the all-models-everywhere baseline)."""
+
+    placed: Dict[Key, bool]
+    actions: List[PlacementAction] = dataclasses.field(
+        default_factory=list)
+
+    def is_placed(self, model: str, region: str) -> bool:
+        return self.placed.get((model, region), True)
+
+    def validate(self) -> None:
+        for a in self.actions:
+            if a.lead_time < 0:
+                raise ValueError(
+                    f"PlacementAction[{a.model},{a.region}]: negative "
+                    f"lead_time {a.lead_time}")
+            want = self.placed.get((a.model, a.region))
+            if want is not None and want != a.deploy:
+                raise ValueError(
+                    f"PlacementAction[{a.model},{a.region}]: action "
+                    f"deploy={a.deploy} contradicts placed={want}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementState:
+    """What the planner needs to price placement transitions: the
+    cluster's current deployments, which regions hold the model's
+    weights locally, warm (retag-window) spot VM tags, and regions
+    currently down.  Fed to planners that advertise the duck-typed
+    ``set_placement_state`` capability before each hourly ``plan``."""
+
+    placed: FrozenSet[Key] = frozenset()
+    weights_local: FrozenSet[Key] = frozenset()
+    warm_spot: Dict[Key, int] = dataclasses.field(default_factory=dict)
+    down_regions: FrozenSet[str] = frozenset()
+
+
 @dataclasses.dataclass
 class Plan:
-    """One hourly control decision: scaling targets + routing split."""
+    """One hourly control decision: scaling targets + routing split +
+    staged model placement."""
 
     t: float                                  # plan creation time (sim s)
     targets: Dict[Key, int]                   # ILP n+δ per (model, region)
     forecasts: Dict[Key, float]               # peak TPS the ILP planned for
     routing: Optional[RoutingPlan] = None     # None → router's own policy
+    placement: Optional[PlacementPlan] = None  # None → all models placed
     horizon: float = 3600.0                   # validity window (s)
     cost_estimate: float = 0.0                # ILP objective ($)
     status: str = ""                          # ILP solver status

@@ -103,10 +103,14 @@ class Forecaster(Protocol):
 class GlobalPlanner(Protocol):
     """Hourly global planner (§5–§6.3): forecast + ILP → one ``Plan``
     of per-(model, region) instance targets (actuated by the Scaler at
-    its own pace) plus optional cross-region routing fractions
-    (consumed by a plan-aware Router).  Legacy planners returning a
-    bare ``(targets, forecasts)`` tuple are still accepted by the
-    simulator's hourly adapter."""
+    its own pace), optional cross-region routing fractions (consumed by
+    a plan-aware Router), and optional staged model-placement actions
+    (actuated by the cluster at each action's ``effective_at``).
+    Planners may additionally advertise the duck-typed
+    ``set_placement_state(state)`` capability to receive the cluster's
+    deployment/warmth snapshot before each ``plan`` call.  Legacy
+    planners returning a bare ``(targets, forecasts)`` tuple are still
+    accepted by the simulator's hourly adapter."""
 
     def plan(self, now: float, instances: Dict[Key, int],
              history: Dict[Key, np.ndarray],

@@ -48,6 +48,63 @@ class PolicySpec:
         return {"name": self.name, "kwargs": dict(self.kwargs)}
 
 
+@dataclasses.dataclass(frozen=True)
+class OutageWindow:
+    """One region-outage window in sim seconds: the region's capacity
+    (live instances *and* spot pool) is unavailable in [start, end)."""
+
+    region: str
+    start: float
+    end: float
+
+    def to_dict(self) -> Dict:
+        return {"region": self.region, "start": self.start,
+                "end": self.end}
+
+
+@dataclasses.dataclass
+class ScenarioSpec:
+    """Runtime stress scenario: region outage windows and per-region
+    instance-capacity caps.  The simulator actuates outages (draining
+    the region, refusing acquisitions); the forecast-aware planner sees
+    the same windows ahead of time and evacuates placement before they
+    hit.  Hour-indexed model-popularity shifts are a *workload*
+    property — see ``repro.sim.workload.PopularityShift``."""
+
+    outages: Tuple[OutageWindow, ...] = ()
+    region_caps: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.outages = tuple(
+            o if isinstance(o, OutageWindow) else OutageWindow(**o)
+            for o in self.outages)
+
+    def validate(self) -> "ScenarioSpec":
+        for o in self.outages:
+            if o.end <= o.start:
+                raise ValueError(
+                    f"ScenarioSpec outage for {o.region!r}: end {o.end} "
+                    f"must be past start {o.start}")
+        for rg, cap in self.region_caps.items():
+            if cap <= 0:
+                raise ValueError(
+                    f"ScenarioSpec.region_caps[{rg!r}] must be positive")
+        return self
+
+    def to_dict(self) -> Dict:
+        return {"outages": [o.to_dict() for o in self.outages],
+                "region_caps": dict(self.region_caps)}
+
+    @classmethod
+    def coerce(cls, v) -> Optional["ScenarioSpec"]:
+        if v is None or isinstance(v, cls):
+            return v
+        if isinstance(v, Mapping):
+            return cls(outages=tuple(v.get("outages", ())),
+                       region_caps=dict(v.get("region_caps", {})))
+        raise TypeError(f"cannot interpret {v!r} as a ScenarioSpec")
+
+
 _POLICY_SLOTS = ("scaler", "scheduler", "router", "queue", "planner")
 
 
@@ -70,6 +127,14 @@ class StackSpec:
     queue: Optional[PolicySpec] = dataclasses.field(
         default_factory=lambda: PolicySpec("niw"))
     planner: Optional[PolicySpec] = None
+
+    # scenario & placement --------------------------------------------------
+    # stress scenario (region outages, per-region capacity caps);
+    # None → the default steady-state run
+    scenario: Optional[ScenarioSpec] = None
+    # initial model placement: model → regions it is deployed in;
+    # None → every model in every region (the PR 3 baseline)
+    placement: Optional[Dict[str, Tuple[str, ...]]] = None
 
     # pool layout -----------------------------------------------------------
     siloed: bool = False                  # separate IW/NIW pools
@@ -106,6 +171,10 @@ class StackSpec:
         self.regions = tuple(self.regions)
         for slot in _POLICY_SLOTS:
             setattr(self, slot, PolicySpec.coerce(getattr(self, slot)))
+        self.scenario = ScenarioSpec.coerce(self.scenario)
+        if self.placement is not None:
+            self.placement = {m: tuple(rgs)
+                              for m, rgs in dict(self.placement).items()}
 
     # -------------------------------------------------------------- validate
     def validate(self) -> "StackSpec":
@@ -144,6 +213,31 @@ class StackSpec:
                 raise ValueError(f"slo_ttft[{tier!r}] must be positive")
         if self.max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if self.scenario is not None:
+            self.scenario.validate()
+            for o in self.scenario.outages:
+                if o.region not in self.regions:
+                    raise ValueError(
+                        f"scenario outage region {o.region!r} not in "
+                        f"StackSpec.regions")
+            for rg in self.scenario.region_caps:
+                if rg not in self.regions:
+                    raise ValueError(
+                        f"scenario region_caps region {rg!r} not in "
+                        f"StackSpec.regions")
+        if self.placement is not None:
+            for m, rgs in self.placement.items():
+                if m not in self.models:
+                    raise ValueError(
+                        f"placement model {m!r} not in StackSpec.models")
+                if not rgs:
+                    raise ValueError(
+                        f"placement[{m!r}] must name >= 1 region")
+                for rg in rgs:
+                    if rg not in self.regions:
+                        raise ValueError(
+                            f"placement[{m!r}] region {rg!r} not in "
+                            f"StackSpec.regions")
         return self
 
     # ------------------------------------------------------------- dict I/O
@@ -151,12 +245,13 @@ class StackSpec:
         out = {}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
-            if isinstance(v, PolicySpec):
+            if isinstance(v, (PolicySpec, ScenarioSpec)):
                 v = v.to_dict()
             elif isinstance(v, tuple):
                 v = list(v)
             elif isinstance(v, dict):
-                v = dict(v)
+                v = {k: (list(x) if isinstance(x, tuple) else x)
+                     for k, x in v.items()}
             out[f.name] = v
         return out
 

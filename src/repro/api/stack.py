@@ -41,6 +41,10 @@ class BuildContext:
     # buckets, capped by what the history lookback actually retains)
     tps_window: float = 60.0
     history_lookback: float = 8 * 86400.0
+    # stress scenario (outage windows / region caps): the sageserve
+    # planner reads the outage schedule so placement evacuates ahead
+    # of known windows
+    scenario: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -86,6 +90,8 @@ class ServingStack:
             history_lookback=spec.history_lookback,
             cost_model=CostModel(alpha=spec.cost_alpha,
                                  rates=dict(spec.cost_rates)),
+            scenario=spec.scenario,
+            placement=spec.placement,
         )
 
     def simulate(self, trace: Sequence[Request], name: str = "sim"
@@ -106,7 +112,8 @@ def build_stack(spec: StackSpec,
     profiles = profiles or {m: PROFILES[m] for m in spec.models}
     ctx = BuildContext(tuple(spec.models), tuple(spec.regions),
                        dict(profiles), tps_window=spec.tps_window,
-                       history_lookback=spec.history_lookback)
+                       history_lookback=spec.history_lookback,
+                       scenario=spec.scenario)
     return ServingStack(
         spec=spec,
         scaler=resolve("scaler", spec.scaler, ctx),

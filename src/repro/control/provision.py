@@ -31,6 +31,27 @@ feasible for the myopic program is feasible here (set ω to the ε-home /
 transportation split), so with λ = 0 the co-optimized instance cost is
 never worse, and with λ > 0 it exceeds the myopic optimum by at most
 λ·(1-ε)·Σρ — negligible at the default λ.
+
+Setting ``placed`` (and optionally ``place_cost`` / ``deployable``)
+adds the third control knob — **model placement** binaries y_{i,j} with
+lead-time-aware transition costs (paper §5's higher-lead-time
+decisions):
+
+  capacity gating:  Σ_k (n+δ)_{i,j,k} ≤ M_{i,j} · y_{i,j}            ∀ i,j
+  routing gating:   ω_{i,j,j'} ≤ y_{i,j'}           ∀ i,j' and ρ_{i,j} > 0
+  conditional min:  Σ_k (n+δ)_{i,j,k} ≥ min_inst · y_{i,j}           ∀ i,j
+  conditional home: ω_{i,j,j} ≥ ε · y_{i,j}             ∀ i,j, ρ_{i,j} > 0
+  not deployable:   y_{i,j} = 0 where ``deployable[i,j]`` is False
+
+  minimize  γ + μ + λ·spill + Σ_{i,j} place_cost_{i,j} · y_{i,j}
+
+``place_cost`` prices a *new* deployment (0 where already placed) by
+its actuation lead time: warm spot retag ≪ cold local weight load ≪
+remote fetch — the planner derives it from the cluster's placement
+state.  Undeploying (y 1 → 0) zeroes the endpoint, so δ = -n earns
+back the VM cost α·n; that asymmetry is what lets the placement-aware
+plan shut down unpopular (model, region) endpoints the min-instance
+floor would otherwise keep alive forever.
 """
 from __future__ import annotations
 
@@ -56,6 +77,12 @@ class ProvisionProblem:
     min_instances: int = 2
     max_instances: Optional[int] = None
     buffer: Optional[np.ndarray] = None       # (l, r) NIW headroom β (TPS)
+    # placement knob (None → placement not co-optimized, y frozen at 1)
+    placed: Optional[np.ndarray] = None       # (l, r) current placement 0/1
+    place_cost: Optional[np.ndarray] = None   # (l, r) $ of a new deploy
+    deployable: Optional[np.ndarray] = None   # (l, r) False forces y = 0
+    pinned: Optional[np.ndarray] = None       # (l, r) True forces y = 1
+    #                                           (unless not deployable)
 
 
 @dataclasses.dataclass
@@ -65,6 +92,7 @@ class ProvisionSolution:
     status: str
     nodes: int
     omega: Optional[np.ndarray] = None   # (l, r, r) routing fractions
+    y: Optional[np.ndarray] = None       # (l, r) placement binaries
 
 
 def _demand(problem: ProvisionProblem) -> np.ndarray:
@@ -155,9 +183,11 @@ def solve(problem: ProvisionProblem, max_nodes: int = 2000
                              status=res.status, nodes=res.nodes)
 
 
-def _add_shared_rows(ub: _RowBuilder, problem, n, l, r, g, vid):
+def _add_shared_rows(ub: _RowBuilder, problem, n, l, r, g, vid, yid=None):
     """Rows common to both programs: region capacity and endpoint
-    min/max instance counts."""
+    min/max instance counts.  With placement binaries (``yid``) the
+    min-instance floor is conditional — min_inst · y ≤ Σ (n+δ) — so an
+    undeployed endpoint may legally drop to zero."""
     if problem.region_cap is not None:
         gpi = (problem.gpus_per_instance
                if problem.gpus_per_instance is not None
@@ -172,7 +202,13 @@ def _add_shared_rows(ub: _RowBuilder, problem, n, l, r, g, vid):
     for i in range(l):
         for j in range(r):
             idx = [vid(i, j, k) for k in range(g)]
-            ub.add(idx, [-1.0] * g, n[i, j].sum() - problem.min_instances)
+            if yid is None:
+                ub.add(idx, [-1.0] * g,
+                       n[i, j].sum() - problem.min_instances)
+            else:
+                ub.add(idx + [yid(i, j)],
+                       [-1.0] * g + [float(problem.min_instances)],
+                       n[i, j].sum())
             if problem.max_instances is not None:
                 ub.add(idx, [1.0] * g,
                        problem.max_instances - n[i, j].sum())
@@ -182,21 +218,29 @@ def solve_with_routing(problem: ProvisionProblem,
                        spill_cost_per_tps: float = 1e-3,
                        max_nodes: int = 2000) -> ProvisionSolution:
     """Co-optimize instance deltas with cross-region routing fractions
-    ω_{i,j→j'} (see module docstring).  Returns a solution whose
-    ``omega[i, j]`` rows are the traffic split of (model i, home j)."""
+    ω_{i,j→j'} — and, when ``problem.placed`` is set, with placement
+    binaries y_{i,j} priced by lead-time-aware transition costs (see
+    module docstring).  Returns a solution whose ``omega[i, j]`` rows
+    are the traffic split of (model i, home j) and whose ``y`` is the
+    target placement."""
     n = np.asarray(problem.n, float)
     l, r, g = n.shape
     theta = np.asarray(problem.theta, float)
     rho = _demand(problem)
+    placement = problem.placed is not None
     nv = l * r * g
     nw = l * r * r
-    ntot = 2 * nv + nw
+    ny = l * r if placement else 0
+    ntot = 2 * nv + nw + ny
 
     def vid(i, j, k):  # delta var id
         return (i * r + j) * g + k
 
     def wid(i, j, jp):  # spill var id (offset by 2*nv)
         return 2 * nv + (i * r + j) * r + jp
+
+    def yid(i, j):  # placement var id (offset by 2*nv + nw)
+        return 2 * nv + nw + i * r + j
 
     c = np.zeros(ntot)
     c[:nv] = np.broadcast_to(problem.alpha, (l, r, g)).reshape(-1)
@@ -208,6 +252,18 @@ def solve_with_routing(problem: ProvisionProblem,
                 if jp != j:
                     c[wid(i, j, jp)] = spill_cost_per_tps * rho[i, j]
 
+    placed = (np.asarray(problem.placed, float).reshape(l, r)
+              if placement else None)
+    deployable = (np.ones((l, r), bool) if problem.deployable is None
+                  else np.asarray(problem.deployable, bool).reshape(l, r))
+    if placement and problem.place_cost is not None:
+        pc = np.asarray(problem.place_cost, float).reshape(l, r)
+        for i in range(l):
+            for j in range(r):
+                # transitions are only priced on *new* deploys
+                if placed[i, j] < 0.5 and np.isfinite(pc[i, j]):
+                    c[yid(i, j)] = pc[i, j]
+
     ub = _RowBuilder()
 
     # m >= delta  ->  delta - m <= 0
@@ -215,10 +271,16 @@ def solve_with_routing(problem: ProvisionProblem,
         ub.add([v, nv + v], [1.0, -1.0], 0.0)
 
     # home minimum: -ω_{ijj} <= -ε  (harmless for zero-demand keys: the
-    # routed-load coefficient ρ·ω is 0 there, so it cannot bind capacity)
+    # routed-load coefficient ρ·ω is 0 there, so it cannot bind
+    # capacity).  With placement the floor is conditional — an
+    # undeployed home must be able to spill everything away.
     for i in range(l):
         for j in range(r):
-            ub.add([wid(i, j, j)], [-1.0], -problem.epsilon)
+            if placement:
+                ub.add([wid(i, j, j), yid(i, j)],
+                       [-1.0, problem.epsilon], 0.0)
+            else:
+                ub.add([wid(i, j, j)], [-1.0], -problem.epsilon)
 
     # routed load fits capacity:
     #   Σ_j ρ_{ij} ω_{ijj'} - Σ_k θ_{ik} δ_{ij'k} <= Σ_k θ_{ik} n_{ij'k}
@@ -238,7 +300,33 @@ def solve_with_routing(problem: ProvisionProblem,
         rhs = (theta[i][None, :] * n[i]).sum() - rho[i].sum()
         ub.add(idx, val, rhs)
 
-    _add_shared_rows(ub, problem, n, l, r, g, vid)
+    _add_shared_rows(ub, problem, n, l, r, g, vid,
+                     yid=yid if placement else None)
+
+    if placement:
+        # big-M capacity gating: Σ_k (n+δ) <= M·y, so y = 0 forces the
+        # endpoint to zero instances (δ = -n) and y = 1 is implied by
+        # any positive capacity
+        ubf = _delta_bounds(problem, n, rho, theta, l, r, g)
+        for i in range(l):
+            for j in range(r):
+                big_m = n[i, j].sum() + sum(
+                    ubf[vid(i, j, k)][1] for k in range(g))
+                if problem.max_instances is not None:
+                    big_m = min(big_m, float(problem.max_instances))
+                ub.add([vid(i, j, k) for k in range(g)] + [yid(i, j)],
+                       [1.0] * g + [-float(big_m)], -n[i, j].sum())
+        # routing gating for loaded homes: ω_{ijj'} <= y_{ij'} — no
+        # traffic may be planned into an undeployed region.  Zero-demand
+        # homes are skipped: their ω carries no load, and gating them
+        # would make the assignment equality infeasible for a model
+        # undeployed everywhere.
+        for i in range(l):
+            for j in range(r):
+                if rho[i, j] <= 0.0:
+                    continue
+                for jp in range(r):
+                    ub.add([wid(i, j, jp), yid(i, jp)], [1.0, -1.0], 0.0)
 
     # assignment: Σ_{j'} ω_{ijj'} = 1
     eq = _RowBuilder()
@@ -248,14 +336,24 @@ def solve_with_routing(problem: ProvisionProblem,
 
     bounds = _delta_bounds(problem, n, rho, theta, l, r, g)
     bounds += [(0.0, 1.0)] * nw
+    if placement:
+        pinned = (np.zeros((l, r), bool) if problem.pinned is None
+                  else np.asarray(problem.pinned, bool).reshape(l, r))
+        # an outage (not deployable) outranks a demand pin
+        bounds += [((0.0, 0.0) if not deployable[i, j] else
+                    (1.0, 1.0) if pinned[i, j] else (0.0, 1.0))
+                   for i in range(l) for j in range(r)]
     integrality = np.concatenate([np.ones(nv, bool),
-                                  np.zeros(nv + nw, bool)])
+                                  np.zeros(nv + nw, bool),
+                                  np.ones(ny, bool)])
     res = solve_ilp(np.asarray(c), A_ub=ub.matrix(ntot),
                     b_ub=np.asarray(ub.rhs), A_eq=eq.matrix(ntot),
                     b_eq=np.asarray(eq.rhs), bounds=bounds,
                     integrality=integrality, max_nodes=max_nodes)
     delta = res.x[:nv].reshape(l, r, g)
-    omega = res.x[2 * nv:].reshape(l, r, r)
+    omega = res.x[2 * nv:2 * nv + nw].reshape(l, r, r)
+    y = (np.round(res.x[2 * nv + nw:]).reshape(l, r)
+         if placement else None)
     return ProvisionSolution(delta=delta, objective=res.objective,
                              status=res.status, nodes=res.nodes,
-                             omega=omega)
+                             omega=omega, y=y)

@@ -46,12 +46,16 @@ class QueueManager:
         self.enqueued += 1
 
     def depth(self, model: Optional[str] = None) -> int:
+        # read-only probe: .get, never indexing — indexing a defaultdict
+        # inserts an empty deque per unknown key, growing state with
+        # every speculative query
         if model is not None:
-            return len(self.queues[model])
+            q = self.queues.get(model)
+            return len(q) if q is not None else 0
         return sum(len(q) for q in self.queues.values())
 
     def backlog_tokens(self, model: str) -> float:
-        return self._tokens[model]
+        return self._tokens.get(model, 0.0)
 
     # --------------------------------------------------------------- signals
     def on_capacity_signal(self, model: str, region: str, util: float,
@@ -60,11 +64,18 @@ class QueueManager:
 
         Releases 1 (util < one_thresh) or 2 (util < two_thresh) requests
         per live instance — FIFO, so the oldest (closest to promotion)
-        leave first.
+        leave first.  A signal from an endpoint with no live instances
+        (fully draining, undeployed, or dead) releases nothing: a
+        request stamped onto a dead (model, region) would never be
+        served.
         """
+        if live_instances < 1:
+            return []
         per_inst = 2 if util < self.two_thresh else (
             1 if util < self.one_thresh else 0)
-        n = per_inst * max(live_instances, 1)
+        n = per_inst * live_instances
+        if n <= 0 or model not in self.queues:
+            return []
         q = self.queues[model]
         out = []
         while q and len(out) < n:

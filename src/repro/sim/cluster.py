@@ -14,8 +14,10 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, \
+    Set, Tuple
 
+from repro.api.plan import PlacementState
 from repro.control.cost import CostModel
 from repro.core.scaling import EndpointView, ScaleAction
 from repro.sim.instance import Instance
@@ -36,6 +38,7 @@ class PendingInstance:
     model: str
     region: str
     pool: str
+    cancelled: bool = False   # undeployed/failed before coming up
 
 
 @dataclasses.dataclass
@@ -180,7 +183,9 @@ class Cluster:
                  pools: Tuple[str, ...] = ("unified",),
                  initial_per_pool: Optional[Dict[str, int]] = None,
                  spot_retag_time: float = 600.0,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 placement: Optional[Mapping[str, Sequence[str]]] = None,
+                 region_caps: Optional[Mapping[str, int]] = None):
         # spot VMs donated to external (preemptible) customers are
         # redeployed with the customer's model after ~spot_retag_time;
         # reclaiming them then costs a full model redeploy (~10 min)
@@ -196,6 +201,20 @@ class Cluster:
         self.endpoints: Dict[Tuple[str, str, str], Endpoint] = {}
         self.spot: Dict[str, List[SpotVM]] = {r: [] for r in regions}
 
+        # placement: which (model, region) pairs are deployed (accept
+        # instances and traffic) and which regions hold which weights
+        # locally.  None → the all-models-everywhere baseline.
+        self.deployed: Set[Key] = {
+            (m, r) for m in models for r in regions
+            if placement is None or r in placement.get(m, ())}
+        self.weights_local: Dict[str, Set[str]] = {
+            r: {m for m in models if (m, r) in self.deployed}
+            for r in regions}
+        self.down_regions: Set[str] = set()
+        self.region_caps: Dict[str, int] = dict(region_caps or {})
+        self.deploy_events = 0
+        self.undeploy_events = 0
+
         # accounting ---------------------------------------------------------
         self.instance_seconds: Dict[Key, float] = {}
         self.wasted_seconds: Dict[Key, float] = {}   # provisioning
@@ -209,6 +228,8 @@ class Cluster:
                 for pool in pools:
                     ep = Endpoint(m, r, profiles[m], order_fn, pool)
                     self.endpoints[(m, r, pool)] = ep
+                    if (m, r) not in self.deployed:
+                        continue  # undeployed pairs start empty
                     n0 = (initial_per_pool or {}).get(
                         pool, initial_instances // max(len(pools), 1))
                     for _ in range(n0):
@@ -253,11 +274,18 @@ class Cluster:
     # ---------------------------------------------------------------- scaling
     def apply_action(self, act: ScaleAction, now: float
                      ) -> List[Tuple[str, float, PendingInstance]]:
-        """Returns provisioning events [("instance_ready", t, pending)]."""
+        """Returns provisioning events [("instance_ready", t, pending)].
+
+        Scale-outs are refused for (model, region) pairs that are not
+        deployed — placement, not the scaler, decides where a model may
+        run — and for regions currently down."""
         self.accrue(now)
         ep = self.endpoints[(act.model, act.region, act.pool)]
         events = []
         if act.delta > 0:
+            if (act.model, act.region) not in self.deployed \
+                    or act.region in self.down_regions:
+                return events
             for _ in range(act.delta):
                 delay = self._acquire_delay(act.model, act.region, now)
                 if delay is None:
@@ -276,8 +304,20 @@ class Cluster:
                 self.scale_in_events += 1
         return events
 
+    def region_instances(self, region: str) -> int:
+        """Live + pending instances across all models/pools in a region
+        (the quantity scenario ``region_caps`` bound)."""
+        return sum(len(ep.instances) + len(ep.pending)
+                   for (m, r, pool), ep in self.endpoints.items()
+                   if r == region)
+
     def _acquire_delay(self, model: str, region: str, now: float
                        ) -> Optional[float]:
+        if region in self.down_regions:
+            return None
+        cap = self.region_caps.get(region)
+        if cap is not None and self.region_instances(region) >= cap:
+            return None
         pool = self.spot[region]
         if not pool:
             return None
@@ -287,7 +327,20 @@ class Cluster:
         if same is not None:
             pool.remove(same)
             return prof.spot_swap_time
-        pool.pop(0)
+        # Paying a full load anyway: evict a VM whose warm tag serves no
+        # future demand — untagged or past the retag window — before
+        # sacrificing a warm model-tagged VM a later acquire could have
+        # cheap-swapped.  Among warm VMs, evict the one closest to
+        # expiry.
+        victim = next((v for v in pool if v.last_model is None
+                       or now - v.since >= self.spot_retag_time), None)
+        if victim is None:
+            victim = min(pool, key=lambda v: v.since)
+        pool.remove(victim)
+        if model not in self.weights_local[region]:
+            # weights not in-region: remote fetch, local thereafter
+            self.weights_local[region].add(model)
+            return prof.load_time_remote
         return prof.load_time_local
 
     def _pick_drain(self, ep: Endpoint) -> Optional[Instance]:
@@ -296,11 +349,18 @@ class Cluster:
             return None
         return min(live, key=lambda i: i.reserved_tokens)
 
-    def on_instance_ready(self, p: PendingInstance, now: float) -> Instance:
+    def on_instance_ready(self, p: PendingInstance, now: float
+                          ) -> Optional[Instance]:
         self.accrue(now)
         ep = self.endpoints[(p.model, p.region, p.pool)]
         if p in ep.pending:
             ep.pending.remove(p)
+        if p.cancelled or (p.model, p.region) not in self.deployed \
+                or p.region in self.down_regions:
+            # undeployed (or failed) while provisioning: the VM goes
+            # back to the pool instead of serving
+            self.spot[p.region].append(SpotVM(p.model, now))
+            return None
         return ep.new_instance(now)
 
     def reap_drained(self, now: float) -> int:
@@ -313,6 +373,86 @@ class Cluster:
                 self.spot[r].append(SpotVM(m, now))
                 n += 1
         return n
+
+    # -------------------------------------------------------------- placement
+    def is_deployed(self, model: str, region: str) -> bool:
+        return (model, region) in self.deployed
+
+    def deploy(self, model: str, region: str, now: float) -> bool:
+        """Actuate a staged deploy: the lead time already covered the
+        weight distribution, so the region serves local loads from here
+        on.  Instances arrive via the scaler's next targets."""
+        if region in self.down_regions:
+            return False
+        if (model, region) in self.deployed:
+            return True
+        self.accrue(now)
+        self.deployed.add((model, region))
+        self.weights_local[region].add(model)
+        self.deploy_events += 1
+        return True
+
+    def undeploy(self, model: str, region: str, now: float) -> int:
+        """Drain-then-retag: every live instance of the pair drains (the
+        reap donates it to the spot pool tagged with the model, so a
+        re-deploy within the retag window is a cheap role flip); pending
+        acquisitions are cancelled.  Returns instances drained."""
+        if (model, region) not in self.deployed:
+            return 0
+        self.accrue(now)
+        self.deployed.discard((model, region))
+        n = 0
+        for pool in self.pools:
+            ep = self.endpoints[(model, region, pool)]
+            for p in ep.pending:
+                p.cancelled = True
+            for inst in list(ep.instances.values()):
+                if not inst.draining:
+                    ep.drain(inst)
+                    n += 1
+        self.scale_in_events += n
+        self.undeploy_events += 1
+        return n
+
+    # ---------------------------------------------------------------- outages
+    def fail_region(self, region: str, now: float) -> int:
+        """Scenario outage: all live instances drain, acquisitions are
+        refused until ``restore_region``.  Returns instances drained."""
+        self.accrue(now)
+        self.down_regions.add(region)
+        n = 0
+        for (m, r, pool), ep in self.endpoints.items():
+            if r != region:
+                continue
+            for p in ep.pending:
+                p.cancelled = True
+            for inst in list(ep.instances.values()):
+                if not inst.draining:
+                    ep.drain(inst)
+                    n += 1
+        return n
+
+    def restore_region(self, region: str, now: float) -> None:
+        self.accrue(now)
+        self.down_regions.discard(region)
+
+    def placement_state(self, now: float) -> PlacementState:
+        """Snapshot for the planner's lead-time pricing: deployments,
+        weight locality, warm spot tags, down regions."""
+        warm: Dict[Key, int] = {}
+        for r, pool in self.spot.items():
+            for v in pool:
+                if v.last_model is not None \
+                        and now - v.since < self.spot_retag_time:
+                    k = (v.last_model, r)
+                    warm[k] = warm.get(k, 0) + 1
+        return PlacementState(
+            placed=frozenset(self.deployed),
+            weights_local=frozenset(
+                (m, r) for r, ms in self.weights_local.items()
+                for m in ms),
+            warm_spot=warm,
+            down_regions=frozenset(self.down_regions))
 
     # ----------------------------------------------------------------- stats
     def instance_hours(self) -> Dict[Key, float]:

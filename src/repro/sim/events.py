@@ -55,9 +55,31 @@ class Hour(Event):
     """Hourly planning boundary (forecast + ILP)."""
 
 
+@dataclasses.dataclass(eq=False, slots=True)
+class PlacementEffective(Event):
+    """A staged model-placement action reaching its ``effective_at``:
+    the cluster deploys (weights live, endpoint accepts instances) or
+    undeploys (drain-then-retag) the (model, region) pair."""
+
+    action: object          # repro.api.plan.PlacementAction
+
+
+@dataclasses.dataclass(eq=False, slots=True)
+class OutageStart(Event):
+    """A scenario region outage begins: instances fail, acquisitions
+    are refused until the matching ``OutageEnd``."""
+
+    region: str
+
+
+@dataclasses.dataclass(eq=False, slots=True)
+class OutageEnd(Event):
+    region: str
+
+
 # Control events keep firing while work is in flight but must not extend
 # the simulation past its horizon on their own.
-CONTROL_EVENTS = (Tick, Hour)
+CONTROL_EVENTS = (Tick, Hour, PlacementEffective, OutageStart, OutageEnd)
 # Exact-class set for the hot loop (isinstance is ~4x slower); derived,
 # so new control event types only need adding to CONTROL_EVENTS.
 CONTROL_EVENT_SET = frozenset(CONTROL_EVENTS)

@@ -38,6 +38,7 @@ from repro.core.scaling import EndpointView, ScaleAction, ScalingPolicy
 from repro.sim.cluster import Cluster, PendingInstance
 from repro.sim.events import (CONTROL_EVENT_SET, Arrival, DecodeDone,
                               Event, HookBus, Hour, InstanceReady,
+                              OutageEnd, OutageStart, PlacementEffective,
                               PrefillDone, Retry, Tick)
 from repro.sim.instance import Instance
 from repro.sim.metrics import Report, build_report
@@ -107,6 +108,12 @@ class SimConfig:
     # dollar accounting: CostModel pricing instance-hours in the Report;
     # None → the paper's flat α = $98.32/h
     cost_model: Optional[object] = None
+    # scenario stress knobs (repro.api.spec.ScenarioSpec): region outage
+    # windows + per-region capacity caps; None → steady state
+    scenario: Optional[object] = None
+    # initial model placement {model: (regions,)}; None → every model
+    # deployed in every region
+    placement: Optional[Dict[str, Tuple[str, ...]]] = None
 
 
 class Simulation:
@@ -130,11 +137,17 @@ class Simulation:
         per_pool = ({"IW": cfg.siloed_iw, "NIW": cfg.siloed_niw}
                     if cfg.siloed else
                     {"unified": cfg.initial_instances})
+        region_caps = (dict(cfg.scenario.region_caps)
+                       if cfg.scenario is not None
+                       and getattr(cfg.scenario, "region_caps", None)
+                       else None)
         self.cluster = Cluster(self.regions, self.models, self.profiles,
                                order_fn, pools=pools,
                                initial_per_pool=per_pool,
                                spot_spare=cfg.spot_spare,
-                               cost_model=cfg.cost_model)
+                               cost_model=cfg.cost_model,
+                               placement=cfg.placement,
+                               region_caps=region_caps)
         # per-(model, pool) region → endpoint map for the routing hot path
         self._region_eps: Dict[Tuple[str, str], Dict[str, object]] = {
             (m, pool): {r: self.cluster.endpoint(m, r, pool)
@@ -194,6 +207,12 @@ class Simulation:
         self._wants_signals = (
             obs is not None and obs is not ScalingPolicy.observe)
 
+        # planners may advertise the placement-state feed (duck-typed,
+        # like the router capabilities above)
+        ctl = cfg.controller
+        sps = getattr(ctl, "set_placement_state", None) if ctl else None
+        self._feed_placement_state = sps if callable(sps) else None
+
         self.bus = HookBus()
         self.bus.subscribe(Arrival, self._on_arrival)
         self.bus.subscribe(Retry, self._on_retry)
@@ -202,6 +221,9 @@ class Simulation:
         self.bus.subscribe(InstanceReady, self._on_instance_ready)
         self.bus.subscribe(Tick, self._on_tick)
         self.bus.subscribe(Hour, self._on_hour)
+        self.bus.subscribe(PlacementEffective, self._on_placement)
+        self.bus.subscribe(OutageStart, self._on_outage_start)
+        self.bus.subscribe(OutageEnd, self._on_outage_end)
 
     # --------------------------------------------------------------- helpers
     def _push(self, t: float, event: Event):
@@ -257,6 +279,20 @@ class Simulation:
                         region = routed
                         ep = eps[region]
         inst = ep.pick_jsq()
+        if inst is None and (req.model, region) not in \
+                self.cluster.deployed:
+            # the picked region does not host the model (placement or
+            # outage): spill to the nearest deployed region with live
+            # capacity instead of burning retries against a dead
+            # endpoint.  With the default all-placed stack this branch
+            # never triggers.
+            deployed = self.cluster.deployed
+            for alt in self._prefs[req.region]:
+                if alt != region and (req.model, alt) in deployed:
+                    cand = eps[alt].pick_jsq()
+                    if cand is not None:
+                        region, ep, inst = alt, eps[alt], cand
+                        break
         if inst is None:
             # endpoint has zero live instances: exponential backoff, then
             # drop (surfaced in Report.retry_dropped) instead of requeueing
@@ -320,6 +356,10 @@ class Simulation:
         self._push(cfg.tick, Tick())
         self._push(3600.0, Hour())
         horizon = self.last_arrival + cfg.drain_grace
+        if cfg.scenario is not None:
+            for o in getattr(cfg.scenario, "outages", ()):
+                self._push(o.start, OutageStart(o.region))
+                self._push(o.end, OutageEnd(o.region))
 
         # single-subscriber fast paths: dispatch arrivals without
         # constructing an Arrival event per request, and heap events
@@ -329,7 +369,8 @@ class Simulation:
         direct = (len(handlers) == 1 and handlers[0] == self._on_arrival)
         dispatch = {}
         for et in (Retry, PrefillDone, DecodeDone, InstanceReady,
-                   Tick, Hour):
+                   Tick, Hour, PlacementEffective, OutageStart,
+                   OutageEnd):
             hs = self.bus.handlers_for(et)
             if len(hs) == 1:
                 dispatch[et] = hs[0]
@@ -423,9 +464,25 @@ class Simulation:
     def _on_instance_ready(self, ev: InstanceReady):
         p: PendingInstance = ev.pending
         inst = self.cluster.on_instance_ready(p, self.now)
+        if inst is None:
+            return  # cancelled (undeployed / region failed) meanwhile
         started = inst.maybe_start_prefill(self.now)
         if started:
             self._push(started[1], self._pf_event(inst))
+
+    # ----------------------------------------------------- placement/outages
+    def _on_placement(self, ev: PlacementEffective):
+        act = ev.action
+        if act.deploy:
+            self.cluster.deploy(act.model, act.region, self.now)
+        else:
+            self.cluster.undeploy(act.model, act.region, self.now)
+
+    def _on_outage_start(self, ev: OutageStart):
+        self.cluster.fail_region(ev.region, self.now)
+
+    def _on_outage_end(self, ev: OutageEnd):
+        self.cluster.restore_region(ev.region, self.now)
 
     # ----------------------------------------------------------------- ticks
     def _on_tick(self, ev: Tick):
@@ -486,12 +543,24 @@ class Simulation:
         for (m, r, pool), ep in self.cluster.endpoints.items():
             instances[(m, r)] = instances.get((m, r), 0) + \
                 ep.live_count() + len(ep.pending)
+        if self._feed_placement_state is not None:
+            self._feed_placement_state(
+                self.cluster.placement_state(self.now))
         plan = cfg.controller.plan(
             self.now, instances, self.history_series(), self.niw_last_hour())
         if isinstance(plan, tuple):
             # legacy planners return a bare (targets, forecasts) pair
             targets, forecasts = plan
             plan = Plan(t=self.now, targets=targets, forecasts=forecasts)
+        # stage placement transitions first: undeploys (lead 0) free
+        # capacity before the scaler actuates this hour's targets, and
+        # deploys fire at now + lead — live no earlier than issued + lead
+        if plan.placement is not None:
+            for act in plan.placement.actions:
+                if act.effective_at <= self.now:
+                    self._on_placement(PlacementEffective(act))
+                else:
+                    self._push(act.effective_at, PlacementEffective(act))
         acts = cfg.policy.set_targets(plan.targets, plan.forecasts,
                                       self.now)
         if acts:

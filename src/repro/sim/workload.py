@@ -56,6 +56,32 @@ _POP_NIW = {
 _REGION_AMP = {"eastus": 1.35, "westus": 0.75, "centralus": 1.0}
 
 
+@dataclasses.dataclass(frozen=True)
+class PopularityShift:
+    """Hour-indexed model-popularity shift: within [start_hour,
+    end_hour) the model's popularity weight is multiplied by ``mult``
+    (0 ⇒ demand vanishes, ≫1 ⇒ it spikes) in ``regions`` (None ⇒ all).
+    The scenario knob placement planning exists for: demand moving
+    between models/regions faster than static placement can follow."""
+
+    model: str
+    start_hour: float
+    end_hour: float
+    mult: float
+    regions: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.mult < 0:
+            raise ValueError(
+                f"PopularityShift[{self.model!r}]: mult must be >= 0 "
+                f"(got {self.mult})")
+        if self.end_hour <= self.start_hour:
+            raise ValueError(
+                f"PopularityShift[{self.model!r}]: end_hour "
+                f"{self.end_hour} must be past start_hour "
+                f"{self.start_hour}")
+
+
 @dataclasses.dataclass
 class WorkloadSpec:
     days: float = 1.0
@@ -71,6 +97,7 @@ class WorkloadSpec:
     burst_hours: Tuple[float, ...] = ()
     prompt_lognorm: Tuple[float, float] = (7.2, 1.0)   # median ~1.3k
     output_lognorm: Tuple[float, float] = (5.2, 0.9)   # median ~180
+    pop_shifts: Tuple[PopularityShift, ...] = ()       # scenario layer
 
 
 def _diurnal_vec(hour_of_week: np.ndarray) -> np.ndarray:
@@ -172,6 +199,17 @@ def generate_trace(spec: WorkloadSpec) -> Trace:
     minutes = int(spec.days * 24 * 60)
     models = tuple(spec.models)
     regions = tuple(spec.regions)
+    for s in spec.pop_shifts:
+        # fail loud: a typo'd model/region would otherwise be silently
+        # filtered out and the scenario would quietly not happen
+        if s.model not in models:
+            raise ValueError(
+                f"pop_shifts: model {s.model!r} not in spec.models")
+        for rg in s.regions or ():
+            if rg not in regions:
+                raise ValueError(
+                    f"pop_shifts[{s.model!r}]: region {rg!r} not in "
+                    f"spec.regions")
     tiers = (TIER_IWF, TIER_IWN, TIER_NIW)
     pm, ps = spec.prompt_lognorm
     om, osd = spec.output_lognorm
@@ -222,7 +260,26 @@ def generate_trace(spec: WorkloadSpec) -> Trace:
                 continue
             times = np.repeat(minute_starts, counts) + \
                 rng.uniform(0, 60.0, n)
-            midx = rng.choice(len(models), size=n, p=pop / pop.sum())
+            shifts = [s for s in spec.pop_shifts
+                      if s.model in models
+                      and (s.regions is None or region in s.regions)]
+            if shifts:
+                # hour-indexed popularity: per-arrival weight rows with
+                # shift multipliers applied, sampled by inverse CDF.
+                # (The unshifted path keeps the original rng.choice so
+                # default traces stay bit-identical.)
+                w = np.tile(pop / pop.sum(), (n, 1))
+                hours = times / 3600.0
+                for s in shifts:
+                    mask = (hours >= s.start_hour) & (hours < s.end_hour)
+                    w[mask, models.index(s.model)] *= s.mult
+                w /= w.sum(axis=1, keepdims=True)
+                u = rng.uniform(0.0, 1.0, n)
+                midx = np.minimum(
+                    (u[:, None] > np.cumsum(w, axis=1)).sum(axis=1),
+                    len(models) - 1)
+            else:
+                midx = rng.choice(len(models), size=n, p=pop / pop.sum())
             prompts = np.clip(rng.lognormal(pm, ps, n),
                               16, 32768).astype(np.int64)
             outs = np.clip(rng.lognormal(om, osd, n),

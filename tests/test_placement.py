@@ -1,0 +1,556 @@
+"""Placement as a first-class plan dimension: ILP y binaries, staged
+lead-time actuation, scenario knobs (outages / caps / popularity
+shifts), and the default-stack golden guarantee (all-models-everywhere
+with no scenario must be indistinguishable from the PR 3 baseline).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import (OutageWindow, PlacementAction, PlacementPlan,
+                       PlacementState, PolicySpec, ScenarioSpec,
+                       StackSpec, build_stack)
+from repro.control.planner import ControllerConfig, SageServeController
+from repro.control.provision import (ProvisionProblem, solve,
+                                     solve_with_routing)
+from repro.core.queue_manager import QueueManager
+from repro.core.scaling import ScaleAction, make_policy
+from repro.sim.cluster import Cluster, SpotVM
+from repro.sim.perfmodel import PROFILES
+from repro.sim.simulator import SimConfig, Simulation
+from repro.sim.workload import (PAPER_MODELS, REGIONS, PopularityShift,
+                                WorkloadSpec, generate)
+
+
+def _problem(seed, l=3, r=3, g=1, **kw):
+    rng = np.random.default_rng(seed)
+    return ProvisionProblem(
+        n=rng.integers(2, 10, (l, r, g)).astype(float),
+        theta=rng.uniform(800, 4000, (l, g)),
+        alpha=rng.uniform(50, 120, (g,)),
+        sigma=rng.uniform(5, 30, (l, g)),
+        rho_peak=rng.uniform(0, 20000, (l, r)),
+        epsilon=0.8, min_instances=2, **kw)
+
+
+# ---------------------------------------------------------- placement ILP
+@pytest.mark.parametrize("seed", range(4))
+def test_ilp_never_routes_load_to_unplaced(seed):
+    prob = _problem(seed)
+    l, r, g = prob.n.shape
+    prob.placed = np.ones((l, r))
+    prob.place_cost = np.full((l, r), 20.0)
+    sol = solve_with_routing(prob)
+    assert sol.status in ("optimal", "feasible")
+    assert sol.y is not None and sol.y.shape == (l, r)
+    assert set(np.unique(sol.y)) <= {0.0, 1.0}
+    # no planned traffic into an undeployed region, and zero capacity
+    # behind y = 0
+    npost = prob.n + sol.delta
+    inbound = np.einsum("ij,ijp->ip", prob.rho_peak, sol.omega)
+    assert (inbound[sol.y < 0.5] <= 1e-6).all()
+    assert (npost.sum(axis=2)[sol.y < 0.5] <= 1e-6).all()
+    # placed endpoints keep the min-instance floor
+    assert (npost.sum(axis=2)[sol.y > 0.5]
+            >= prob.min_instances - 1e-6).all()
+    # total demand still served
+    cap = np.einsum("irk,ik->ir", npost, prob.theta)
+    assert (inbound <= cap + 1e-4).all()
+    np.testing.assert_allclose(sol.omega.sum(axis=2), 1.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ilp_placement_never_costs_more_than_blind(seed):
+    """Keeping y ≡ 1 reproduces the placement-blind program, so the
+    placement optimum can only be cheaper (place_cost is only paid on
+    transitions away from the all-placed start)."""
+    prob = _problem(seed)
+    l, r, g = prob.n.shape
+    blind = solve_with_routing(prob, spill_cost_per_tps=0.0)
+    prob.placed = np.ones((l, r))
+    prob.place_cost = np.full((l, r), 20.0)
+    aware = solve_with_routing(prob, spill_cost_per_tps=0.0)
+    tol = max(1e-6, 1e-3 * abs(blind.objective))
+    assert aware.objective <= blind.objective + tol
+
+
+def test_ilp_deployable_and_pinned_bounds():
+    prob = _problem(1)
+    l, r, g = prob.n.shape
+    prob.placed = np.ones((l, r))
+    prob.place_cost = np.zeros((l, r))
+    dep = np.ones((l, r), bool)
+    dep[:, 0] = False                     # region 0 in outage
+    pin = np.zeros((l, r), bool)
+    pin[:, 1] = True                      # region 1 pinned placed
+    prob.deployable = dep
+    prob.pinned = pin
+    sol = solve_with_routing(prob)
+    assert sol.status in ("optimal", "feasible")
+    assert (sol.y[:, 0] == 0).all()       # evacuated
+    assert (sol.y[:, 1] == 1).all()       # pinned
+    assert ((prob.n + sol.delta).sum(axis=2)[:, 0] <= 1e-6).all()
+    # outage outranks a pin on the same cell
+    pin[:, 0] = True
+    sol2 = solve_with_routing(prob)
+    assert (sol2.y[:, 0] == 0).all()
+
+
+def test_ilp_infeasible_when_nothing_deployable():
+    prob = _problem(2)
+    l, r, g = prob.n.shape
+    prob.placed = np.ones((l, r))
+    prob.deployable = np.zeros((l, r), bool)
+    assert solve_with_routing(prob).status == "infeasible"
+
+
+# ------------------------------------------------------------- the planner
+def _controller(**kw):
+    kw.setdefault("models", ["a", "b"])
+    kw.setdefault("regions", ["e", "w"])
+    kw.setdefault("theta", {"a": 1000.0, "b": 1000.0})
+    kw.setdefault("fit_steps", 25)
+    kw.setdefault("min_instances", 1)
+    kw.setdefault("use_placement", True)
+    return SageServeController(ControllerConfig(**kw))
+
+
+def _hist(keys, level=900.0, n=240):
+    rng = np.random.default_rng(0)
+    return {k: level + rng.normal(0, 5.0, n) for k in keys}
+
+
+def test_planner_emits_placement_plan_and_stages_deploys():
+    ctl = _controller(place_leads={"a": (60.0, 600.0, 7200.0),
+                                   "b": (60.0, 600.0, 7200.0)})
+    keys = [(m, r) for m in ("a", "b") for r in ("e", "w")]
+    hist = _hist(keys)
+    hist[("b", "w")] = np.zeros(240)       # no demand: undeploy target
+    # model b not currently placed in e but has demand there
+    ctl.set_placement_state(PlacementState(
+        placed=frozenset(k for k in keys if k != ("b", "e")),
+        weights_local=frozenset(k for k in keys if k != ("b", "e"))))
+    plan = ctl.plan(7200.0, {k: 3 for k in keys if k != ("b", "e")},
+                    hist, {})
+    assert plan.placement is not None
+    plan.placement.validate()
+    pl = plan.placement
+    assert pl.is_placed("a", "e") and pl.is_placed("a", "w")
+    assert pl.is_placed("b", "e")          # demand pulls a deploy
+    assert not pl.is_placed("b", "w")      # zero demand: undeployed
+    by_key = {(a.model, a.region): a for a in pl.actions}
+    dep = by_key[("b", "e")]
+    assert dep.deploy
+    # never placed, no warm VM: the remote-fetch lead, staged ahead —
+    # live no earlier than issued_at + lead
+    assert dep.lead_time == 7200.0
+    assert dep.effective_at == plan.t + 7200.0
+    und = by_key[("b", "w")]
+    assert not und.deploy and und.lead_time == 0.0
+    # targets are consistent with placement: y=0 keys get 0 instances
+    assert plan.targets[("b", "w")] == 0
+    assert plan.targets[("a", "e")] >= 1
+
+
+def test_planner_lead_times_warm_local_remote():
+    ctl = _controller()
+    ctl.set_placement_state(PlacementState(
+        placed=frozenset(),
+        weights_local=frozenset({("a", "e")}),
+        warm_spot={("a", "w"): 2}))
+    assert ctl._lead_time("a", "w") == 60.0      # warm spot retag
+    assert ctl._lead_time("a", "e") == 600.0     # weights in-region
+    assert ctl._lead_time("b", "w") == 7200.0    # remote fetch
+
+
+def test_planner_evacuates_ahead_of_known_outage():
+    """An outage window inside the actuation span makes the region
+    non-deployable; the evacuation undeploy is staged at the outage
+    start, not at plan time."""
+    ctl = _controller(outages=(("w", 10 * 3600.0, 12 * 3600.0),))
+    keys = [(m, r) for m in ("a", "b") for r in ("e", "w")]
+    ctl.set_placement_state(PlacementState(
+        placed=frozenset(keys), weights_local=frozenset(keys)))
+    now = 9.5 * 3600.0
+    plan = ctl.plan(now, {k: 3 for k in keys}, _hist(keys), {})
+    pl = plan.placement
+    assert not pl.is_placed("a", "w") and not pl.is_placed("b", "w")
+    for act in pl.actions:
+        if act.region == "w" and not act.deploy:
+            assert act.effective_at == pytest.approx(10 * 3600.0)
+    # once the window has passed, the region is deployable again
+    plan2 = ctl.plan(13 * 3600.0, {k: int(plan.targets.get(k, 0))
+                                   for k in keys}, _hist(keys), {})
+    assert plan2.placement.is_placed("a", "w")
+
+
+def test_planner_does_not_restage_inflight_remote_deploy():
+    """Regression: a replan while a remote-fetch deploy is still in
+    flight used to re-price it as a local load (the planner optimisti-
+    cally marked the weights local at plan time) and stage a duplicate
+    action that actuated ~50 min before the 2 h fetch could finish."""
+    ctl = _controller()
+    keys = [(m, r) for m in ("a", "b") for r in ("e", "w")]
+    state = PlacementState(
+        placed=frozenset(k for k in keys if k != ("b", "e")),
+        weights_local=frozenset(k for k in keys if k != ("b", "e")))
+    hist = _hist(keys)
+    ctl.set_placement_state(state)
+    t0 = 3600.0
+    plan1 = ctl.plan(t0, {k: 3 for k in keys if k != ("b", "e")},
+                     hist, {})
+    dep1 = [a for a in plan1.placement.actions
+            if (a.model, a.region) == ("b", "e") and a.deploy]
+    assert len(dep1) == 1 and dep1[0].lead_time == 7200.0
+    # next hour: fetch still in flight (cluster state unchanged)
+    ctl.set_placement_state(state)
+    plan2 = ctl.plan(t0 + 3600.0,
+                     {k: 3 for k in keys if k != ("b", "e")}, hist, {})
+    assert plan2.placement.is_placed("b", "e")
+    assert [a for a in plan2.placement.actions
+            if (a.model, a.region) == ("b", "e")] == []
+    # after the fetch lands, cluster state reports it and pricing is
+    # local from then on
+    ctl.set_placement_state(PlacementState(
+        placed=frozenset(keys), weights_local=frozenset(keys)))
+    assert ctl._lead_time("b", "e") == 600.0
+
+
+def test_planner_falls_back_when_nothing_deployable():
+    ctl = _controller(outages=(("e", 0.0, 1e9), ("w", 0.0, 1e9)))
+    keys = [(m, r) for m in ("a", "b") for r in ("e", "w")]
+    ctl.set_placement_state(PlacementState(
+        placed=frozenset(keys), weights_local=frozenset(keys)))
+    plan = ctl.plan(3600.0, {k: 3 for k in keys}, _hist(keys), {})
+    # degraded to the placement-blind program: a usable plan, no y
+    assert plan.placement is None
+    assert plan.status in ("optimal", "feasible")
+
+
+# ------------------------------------------------------ cluster actuation
+def _cluster(**kw):
+    prof = {m: PROFILES[m] for m in ("llama2-70b", "llama3.1-8b")}
+    return Cluster(["e", "w"], list(prof), prof, lambda req, now: 0.0,
+                   initial_instances=2, spot_spare=4, **kw)
+
+
+def test_cluster_initial_placement_and_refused_scaleout():
+    c = _cluster(placement={"llama2-70b": ("e",),
+                            "llama3.1-8b": ("e", "w")})
+    assert c.endpoint("llama2-70b", "e").live_count() == 2
+    assert c.endpoint("llama2-70b", "w").live_count() == 0
+    assert not c.is_deployed("llama2-70b", "w")
+    # scale-out against an undeployed pair is refused
+    ev = c.apply_action(ScaleAction("llama2-70b", "w", +2, "test"), 10.0)
+    assert ev == [] and c.endpoint("llama2-70b", "w").pending == []
+
+
+def test_cluster_undeploy_drains_and_retags_spot():
+    c = _cluster()
+    ep = c.endpoint("llama2-70b", "e")
+    n = c.undeploy("llama2-70b", "e", now=10.0)
+    assert n == 2 and not c.is_deployed("llama2-70b", "e")
+    assert all(i.draining for i in ep.instances.values())
+    c.reap_drained(11.0)
+    assert ep.instances == {}
+    # drained VMs land in the spot pool tagged with the model: a
+    # redeploy inside the retag window is a cheap role flip
+    tags = [v.last_model for v in c.spot["e"]]
+    assert tags.count("llama2-70b") == 2
+    c.deploy("llama2-70b", "e", now=20.0)
+    assert c._acquire_delay("llama2-70b", "e", 30.0) == \
+        PROFILES["llama2-70b"].spot_swap_time
+
+
+def test_cluster_pending_cancelled_on_undeploy():
+    c = _cluster()
+    ev = c.apply_action(ScaleAction("llama2-70b", "e", +1, "t"), 0.0)
+    assert len(ev) == 1
+    pool_before = len(c.spot["e"])
+    c.undeploy("llama2-70b", "e", 1.0)
+    p = ev[0][2]
+    assert p.cancelled
+    assert c.on_instance_ready(p, ev[0][1]) is None
+    assert len(c.spot["e"]) == pool_before + 1   # VM returned to pool
+    assert c.endpoint("llama2-70b", "e").live_count() == 0
+
+
+def test_cluster_outage_fail_restore_and_caps():
+    c = _cluster(region_caps={"w": 5})
+    drained = c.fail_region("e", 5.0)
+    assert drained == 4                    # 2 models × 2 instances
+    assert c._acquire_delay("llama2-70b", "e", 6.0) is None
+    ev = c.apply_action(ScaleAction("llama2-70b", "e", +1, "t"), 6.0)
+    assert ev == []
+    c.restore_region("e", 7.0)
+    assert c._acquire_delay("llama2-70b", "e", 8.0) is not None
+    # region cap: w holds 4 live, cap 5 → one more acquire, then refuse
+    assert c._acquire_delay("llama2-70b", "w", 8.0) is not None
+    c.apply_action(ScaleAction("llama2-70b", "w", +1, "t"), 8.0)
+    assert c.region_instances("w") == 5
+    assert c._acquire_delay("llama2-70b", "w", 9.0) is None
+
+
+def test_cluster_placement_state_snapshot():
+    c = _cluster()
+    c.spot["e"].append(SpotVM("llama2-70b", 100.0))
+    st = c.placement_state(now=200.0)
+    assert ("llama2-70b", "e") in st.placed
+    assert st.warm_spot.get(("llama2-70b", "e")) == 1
+    # outside the retag window the tag is cold
+    st2 = c.placement_state(now=100.0 + c.spot_retag_time + 1)
+    assert ("llama2-70b", "e") not in st2.warm_spot
+    c.fail_region("w", 300.0)
+    assert "w" in c.placement_state(300.0).down_regions
+
+
+# ------------------------------------------------- spot-pool eviction fix
+def test_spot_eviction_preserves_warm_swap():
+    """Regression: paying load_time_local used to evict the pool head
+    even when it was a warm model-tagged VM a later acquire would have
+    cheap-swapped; cold/stale VMs must go first."""
+    c = _cluster()
+    c.spot["e"] = [SpotVM("llama2-70b", since=95.0),   # warm head
+                   SpotVM(None, since=0.0)]
+    d = c._acquire_delay("llama3.1-8b", "e", now=100.0)
+    assert d == PROFILES["llama3.1-8b"].load_time_local
+    # the warm llama2 VM survived: same-model acquire still flips roles
+    assert [v.last_model for v in c.spot["e"]] == ["llama2-70b"]
+    assert c._acquire_delay("llama2-70b", "e", now=110.0) == \
+        PROFILES["llama2-70b"].spot_swap_time
+    # all-warm pool: the VM closest to retag expiry is sacrificed
+    c.spot["e"] = [SpotVM("llama2-70b", since=95.0),
+                   SpotVM("llama2-70b", since=40.0)]
+    c._acquire_delay("llama3.1-8b", "e", now=100.0)
+    assert [v.since for v in c.spot["e"]] == [95.0]
+
+
+def test_spot_eviction_stale_tag_counts_as_cold():
+    c = _cluster()
+    c.spot["e"] = [SpotVM("llama2-70b", since=50.0),
+                   SpotVM("llama2-70b", since=-1000.0)]  # stale tag
+    c._acquire_delay("llama3.1-8b", "e", now=100.0)
+    assert [v.since for v in c.spot["e"]] == [50.0]
+
+
+# ------------------------------------------------------- e2e simulation
+def _scenario_spec(planner_kw, scen=None, placement=None):
+    return StackSpec(
+        models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+        planner=PolicySpec("sageserve",
+                           {"fit_steps": 30, "use_routing": True,
+                            **planner_kw}),
+        router="plan", initial_instances=3, spot_spare=8,
+        drain_grace=2 * 3600.0, scenario=scen, placement=placement)
+
+
+def test_simulation_actuates_placement_and_outage():
+    scen = ScenarioSpec(
+        outages=(OutageWindow("centralus", 4 * 3600.0, 6 * 3600.0),))
+    shifts = (PopularityShift(PAPER_MODELS[0], 2.0, 24.0, 0.0,
+                              regions=("westus",)),)
+    trace = generate(WorkloadSpec(days=0.3, scale=0.015, seed=7,
+                                  pop_shifts=shifts))
+    stack = build_stack(_scenario_spec({"use_placement": True},
+                                       scen=scen))
+    rep = stack.simulate(trace, name="place-sim")
+    done = sum(1 for r in trace if not math.isnan(r.e2e))
+    assert done / len(trace) > 0.97
+    # the planner saw cluster state and emitted placement plans
+    assert stack.planner.placement_state is not None
+    assert stack.planner.last_plan.placement is not None
+    # outage-window requests were actually served elsewhere
+    out = [r for r in trace
+           if r.region == "centralus"
+           and 4 * 3600.0 + 600.0 < r.arrival < 6 * 3600.0
+           and not math.isnan(r.e2e)]
+    assert out and all(r.served_region != "centralus" for r in out)
+
+
+def test_default_stack_ignores_placement_machinery(golden_eq=None):
+    """The all-models-everywhere, no-scenario stack must produce a
+    field-for-field identical Report whether placement is expressed
+    explicitly or left at the default — and the golden fixture test
+    (tests/test_perf_equivalence.py) pins the default against PR 3."""
+    from repro.sim.metrics import report_to_dict
+    trace = generate(WorkloadSpec(days=0.1, scale=0.01, seed=3))
+    spec_default = _scenario_spec({})
+    spec_explicit = _scenario_spec(
+        {}, placement={m: tuple(REGIONS) for m in PAPER_MODELS})
+
+    def run(spec):
+        for r in trace:
+            r.ttft = math.nan
+            r.e2e = math.nan
+            r.priority = 1
+            r.instance = None
+            r.served_region = None
+            r.admitted = math.nan
+        return report_to_dict(build_stack(spec).simulate(trace, name="x"))
+
+    assert run(spec_default) == run(spec_explicit)
+
+
+def test_popularity_shift_moves_demand():
+    spec = WorkloadSpec(days=0.2, scale=0.02, seed=1)
+    base = generate(spec)
+    shifted = generate(WorkloadSpec(
+        days=0.2, scale=0.02, seed=1,
+        pop_shifts=(PopularityShift(PAPER_MODELS[0], 2.0, 24.0, 0.0,
+                                    regions=("westus",)),)))
+
+    def count(reqs, pred):
+        return sum(1 for r in reqs if pred(r))
+
+    m0 = PAPER_MODELS[0]
+    # before the shift hour: same RNG stream structure, demand present
+    assert count(shifted, lambda r: r.model == m0
+                 and r.region == "westus" and r.arrival < 2 * 3600.0) > 0
+    # after: model 0 demand in westus vanishes, total volume preserved
+    assert count(shifted, lambda r: r.model == m0
+                 and r.region == "westus"
+                 and r.arrival >= 2 * 3600.0) == 0
+    assert len(shifted) == pytest.approx(len(base), rel=0.05)
+
+
+def test_popularity_shift_validation():
+    with pytest.raises(ValueError):
+        PopularityShift("m", 0.0, 4.0, -1.0)      # negative weight
+    with pytest.raises(ValueError):
+        PopularityShift("m", 4.0, 4.0, 2.0)       # empty window
+    with pytest.raises(ValueError):               # typo'd model
+        generate(WorkloadSpec(days=0.01, scale=0.01, pop_shifts=(
+            PopularityShift("no-such-model", 0.0, 4.0, 2.0),)))
+    with pytest.raises(ValueError):               # typo'd region
+        generate(WorkloadSpec(days=0.01, scale=0.01, pop_shifts=(
+            PopularityShift(PAPER_MODELS[0], 0.0, 4.0, 2.0,
+                            regions=("nope",)),)))
+
+
+def test_scenario_spec_roundtrip_and_validation():
+    scen = ScenarioSpec(
+        outages=(OutageWindow("eastus", 3600.0, 7200.0),),
+        region_caps={"westus": 12})
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                     scaler="lt-ua", scenario=scen,
+                     placement={PAPER_MODELS[0]: ("eastus",)})
+    spec.validate()
+    d = spec.to_dict()
+    back = StackSpec.from_dict(d)
+    assert back.scenario.outages == scen.outages
+    assert back.scenario.region_caps == scen.region_caps
+    assert back.placement == {PAPER_MODELS[0]: ("eastus",)}
+    with pytest.raises(ValueError):
+        StackSpec(models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+                  scenario=ScenarioSpec(outages=(
+                      OutageWindow("nope", 0.0, 1.0),))).validate()
+    with pytest.raises(ValueError):
+        StackSpec(models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+                  placement={"nope": ("eastus",)}).validate()
+    with pytest.raises(ValueError):
+        ScenarioSpec(outages=(OutageWindow("eastus", 10.0, 5.0),)
+                     ).validate()
+
+
+def test_placement_plan_validate():
+    pl = PlacementPlan(placed={("m", "e"): True},
+                       actions=[PlacementAction("m", "e", True, 0.0,
+                                                600.0)])
+    pl.validate()
+    assert pl.is_placed("m", "e") and pl.is_placed("other", "w")
+    with pytest.raises(ValueError):
+        PlacementPlan(placed={("m", "e"): False},
+                      actions=[PlacementAction("m", "e", True, 0.0, 1.0)]
+                      ).validate()
+    with pytest.raises(ValueError):
+        PlacementPlan(placed={},
+                      actions=[PlacementAction("m", "e", True, 0.0,
+                                               -1.0)]).validate()
+
+
+def test_simulator_stages_action_at_effective_time():
+    """A deploy issued at hour h must be live no earlier than h + lead
+    (and an undeploy with lead 0 must actuate within the same hour)."""
+    lead = 1800.0
+
+    class ScriptedPlanner:
+        def __init__(self):
+            self.states = []
+
+        def set_placement_state(self, st):
+            self.states.append(st)
+
+        def plan(self, now, instances, history, niw):
+            from repro.api import Plan
+            placement = None
+            if now < 2 * 3600.0:   # first hourly plan only
+                placement = PlacementPlan(
+                    placed={(PAPER_MODELS[0], "westus"): True,
+                            (PAPER_MODELS[1], "westus"): False},
+                    actions=[
+                        PlacementAction(PAPER_MODELS[0], "westus", True,
+                                        now, lead),
+                        PlacementAction(PAPER_MODELS[1], "westus", False,
+                                        now, 0.0)])
+            return Plan(t=now, targets={k: 2 for k in instances},
+                        forecasts={k: 100.0 for k in instances},
+                        placement=placement)
+
+    trace = generate(WorkloadSpec(days=0.15, scale=0.01, seed=2))
+    planner = ScriptedPlanner()
+    cfg = SimConfig(policy=make_policy("lt-ua"), controller=planner,
+                    initial_instances=2, spot_spare=8,
+                    drain_grace=2 * 3600.0,
+                    placement={PAPER_MODELS[0]: ("eastus", "centralus"),
+                               PAPER_MODELS[1]: REGIONS,
+                               PAPER_MODELS[2]: REGIONS,
+                               PAPER_MODELS[3]: REGIONS})
+    sim = Simulation(trace, cfg, models=list(PAPER_MODELS),
+                     regions=list(REGIONS), name="staged")
+    cluster = sim.cluster
+    observed = {"before": None, "at": None}
+    from repro.sim.events import Tick
+
+    def watch(_ev):
+        live = cluster.is_deployed(PAPER_MODELS[0], "westus")
+        if sim.now < 3600.0 + lead:
+            observed["before"] = observed["before"] or live
+        elif observed["at"] is None and live:
+            observed["at"] = sim.now
+
+    sim.bus.subscribe(Tick, watch)
+    sim.run()
+    assert planner.states, "placement state was fed to the planner"
+    assert observed["before"] is False      # never live before h + lead
+    assert observed["at"] is not None       # …and live after
+    assert observed["at"] >= 3600.0 + lead
+    # the lead-0 undeploy actuated immediately after the hour
+    assert not cluster.is_deployed(PAPER_MODELS[1], "westus")
+
+
+# ------------------------------------------------- queue-manager guard
+def test_capacity_signal_ignores_dead_endpoint():
+    """Release-during-drain regression: a (model, region) signal with no
+    live instances must release nothing — previously requests were
+    stamped onto the dead region and lost until another signal."""
+    qm = QueueManager()
+
+    class R:
+        def __init__(self):
+            self.model, self.region = "m", ""
+            self.arrival, self.deadline = 0.0, 24 * 3600.0
+            self.prompt_tokens, self.output_tokens = 100, 10
+            self.priority = 1
+
+    r = R()
+    qm.submit(r)
+    out = qm.on_capacity_signal("m", "dead", 0.1, 10.0,
+                                live_instances=0)
+    assert out == []
+    assert r.region == ""                  # not stamped
+    assert qm.depth("m") == 1              # still parked
+    # a live endpoint then receives it normally
+    out = qm.on_capacity_signal("m", "alive", 0.1, 20.0,
+                                live_instances=1)
+    assert [x.region for x in out] == ["alive"]

@@ -72,3 +72,30 @@ def test_backlog_tokens_tracked():
     assert qm.backlog_tokens("m") == 4 * 110
     qm.on_capacity_signal("m", "r", 0.4, 0.0)
     assert qm.backlog_tokens("m") == 2 * 110
+
+
+def test_reads_do_not_insert_keys():
+    """Regression: depth()/backlog_tokens() used to index their
+    defaultdicts, permanently inserting an empty deque / zero counter
+    per speculative probe — state grew with every unknown model key."""
+    qm = QueueManager()
+    for r in mk(2, model="known"):
+        qm.submit(r)
+    for probe in ("ghost-1", "ghost-2", "ghost-3"):
+        assert qm.depth(probe) == 0
+        assert qm.backlog_tokens(probe) == 0.0
+        # capacity signals for unknown models must not insert either
+        assert qm.on_capacity_signal(probe, "r", 0.1, 0.0,
+                                     live_instances=2) == []
+    assert set(qm.queues) == {"known"}
+    assert set(qm._tokens) == {"known"}
+    assert qm.depth() == 2
+
+
+def test_signal_without_live_instances_releases_nothing():
+    qm = QueueManager()
+    for r in mk(3):
+        qm.submit(r)
+    assert qm.on_capacity_signal("m", "r", 0.1, 0.0,
+                                 live_instances=0) == []
+    assert qm.depth("m") == 3 and qm.released == 0
