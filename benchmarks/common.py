@@ -3,11 +3,16 @@ synthetic production trace (see DESIGN.md §7 for the workload anchors).
 
 Strategies are declarative: ``stack_spec`` maps a strategy name to a
 ``StackSpec`` and every run goes through ``repro.api.build_stack`` — the
-same construction path as examples and tests.  Workload subsampling:
-traffic is thinned by ``scale`` and the fleet's instance-count knobs are
-scaled accordingly, preserving per-instance dynamics (see
-sim/perfmodel.py).  All $-figures use the paper's $98.32/h H100-cluster
-price.
+same construction path as examples and tests.  Whole sweeps are
+declarative too: ``bench_experiment`` lifts a ``BenchSpec`` plus a
+strategy list into an ``repro.api.experiment.ExperimentSpec``, and the
+fig/tab modules hand those to ``run_experiment`` (parallel across
+variants, one trace generation per unique workload, fresh request
+copies per run — no shared-mutable-trace resets anywhere).  Workload
+subsampling: traffic is thinned by ``scale`` and the fleet's
+instance-count knobs are scaled accordingly, preserving per-instance
+dynamics (see sim/perfmodel.py).  All $-figures use the paper's
+$98.32/h H100-cluster price.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.api import PolicySpec, StackSpec, build_stack
+from repro.api.experiment import ExperimentSpec
 from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR
 from repro.sim.metrics import Report
 from repro.sim.perfmodel import PerfProfile
@@ -42,11 +48,16 @@ class BenchSpec:
     burst_hours: Tuple[float, ...] = ()
 
 
-def make_trace(spec: BenchSpec):
-    return generate(WorkloadSpec(
+def workload_spec(spec: BenchSpec) -> WorkloadSpec:
+    """The declarative workload for one benchmark setting."""
+    return WorkloadSpec(
         days=spec.days, scale=spec.scale, seed=spec.seed,
-        models=spec.models, burst_mult=spec.burst_mult,
-        burst_hours=spec.burst_hours))
+        models=tuple(spec.models), burst_mult=spec.burst_mult,
+        burst_hours=spec.burst_hours)
+
+
+def make_trace(spec: BenchSpec):
+    return generate(workload_spec(spec))
 
 
 def planner_spec(fit_steps: int = 150, routing: bool = False) -> PolicySpec:
@@ -88,22 +99,42 @@ def stack_spec(spec: BenchSpec, strategy: str,
                      initial_instances=spec.initial_instances, **common)
 
 
-def reset_trace(trace) -> None:
-    import math
-    for r in trace:
-        r.ttft = math.nan
-        r.e2e = math.nan
-        r.priority = 1
-        r.instance = None
-        r.served_region = None
-        r.admitted = math.nan
+def bench_experiment(name: str, spec: BenchSpec,
+                     strategies: Sequence[str] = STRATEGIES,
+                     schedulers: Optional[Sequence[str]] = None,
+                     workloads: Optional[Dict[str, WorkloadSpec]] = None,
+                     profiles: Optional[Dict[str, str]] = None,
+                     ) -> ExperimentSpec:
+    """Lift a ``BenchSpec`` into a declarative sweep.
+
+    Either a ``strategies`` axis, or — for the scheduler studies — a
+    ``schedulers`` axis where every variant runs the same base strategy
+    with a different admission order.  ``workloads`` overrides the
+    single default workload derived from ``spec``.
+    """
+    if schedulers is not None:
+        strat_axis = {sched: stack_spec(spec, strategies[0], sched)
+                      for sched in schedulers}
+    else:
+        strat_axis = {s: stack_spec(spec, s) for s in strategies}
+    return ExperimentSpec(
+        name=name, strategies=strat_axis,
+        workloads=workloads or {"default": workload_spec(spec)},
+        profiles=profiles or {})
 
 
 def run_strategy(trace, spec: BenchSpec, strategy: str,
                  scheduler: Optional[str] = None,
                  profiles: Optional[Dict[str, PerfProfile]] = None
                  ) -> Report:
-    reset_trace(trace)
+    """One-off run of a single strategy over an existing request list.
+
+    The simulator owns the request lifecycle (outcomes are reset at the
+    start of every run), so the same trace can be handed to back-to-back
+    runs without any caller-side reset; sweeps should prefer
+    ``bench_experiment`` + ``run_experiment``, which hand every run
+    fresh request copies.
+    """
     stack = build_stack(stack_spec(spec, strategy, scheduler),
                         profiles=profiles)
     return stack.simulate(trace, name=strategy)

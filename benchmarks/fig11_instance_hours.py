@@ -1,68 +1,67 @@
 """Fig. 11 + Fig. 12a + Fig. 13: strategy comparison — instance-hours,
-latency percentiles, wasted scaling GPU-hours, $ savings."""
+latency percentiles, wasted scaling GPU-hours, $ savings.  One
+declarative five-strategy experiment; everything reported comes off the
+stable Report artifact."""
 from __future__ import annotations
 
-import math
-
-import numpy as np
-
-from benchmarks.common import (DOLLARS_PER_HOUR, BenchSpec, csv_line,
-                               make_trace, run_strategy)
+from benchmarks.common import (DOLLARS_PER_HOUR, BenchSpec,
+                               bench_experiment, csv_line)
+from repro.api.experiment import run_experiment
 
 STRATEGIES = ("reactive", "lt-i", "lt-u", "lt-ua", "chiron")
 
 
-def run(quick: bool = False, reports_out: dict = None):
+def run(quick: bool = False, jobs=None):
     spec = BenchSpec(days=0.5 if quick else 1.0,
                      scale=0.08 if quick else 0.15)
-    trace = make_trace(spec)
+    strategies = STRATEGIES[:3] if quick else STRATEGIES
+    results = run_experiment(bench_experiment("fig11", spec, strategies),
+                             jobs=jobs)
     out = []
-    reports = {}
-    for strat in STRATEGIES[:3 if quick else None]:
-        reports[strat] = run_strategy(trace, spec, strat)
-    if reports_out is not None:
-        reports_out.update(reports)
 
-    base = reports["reactive"]
+    base = results.get(strategy="reactive")
+    base_h = base.total_instance_hours
     floor_h = 2 * len(spec.models) * 3 * (spec.days * 24 + 4)  # min-2 floor
-    for strat, rep in reports.items():
-        ih = rep.total_instance_hours()
-        ih_l2 = sum(v for (m, r), v in rep.instance_hours.items()
-                    if m == "llama2-70b")
+    for strat in strategies:
+        rep = results.get(strategy=strat)
+        ih = rep.total_instance_hours
         out.append(csv_line(f"fig11.instance_hours.{strat}", round(ih, 1),
                             "paper AUC: reactive 362, LT-I 274, LT-U 291, "
                             "LT-UA 277, Chiron 1146 (llama2, 3 regions)"))
         out.append(csv_line(f"fig11.llama2_instance_hours.{strat}",
-                            round(ih_l2, 1), "inst-h"))
+                            round(rep.model_instance_hours("llama2-70b"), 1),
+                            "inst-h"))
         if strat != "reactive":
-            sav = 100 * (1 - ih / base.total_instance_hours())
+            sav = 100 * (1 - ih / base_h)
             dyn = 100 * (1 - (ih - floor_h)
-                         / max(base.total_instance_hours() - floor_h, 1e-9))
+                         / max(base_h - floor_h, 1e-9))
             out.append(csv_line(
                 f"fig11.savings_pct.{strat}", round(sav, 1),
                 f"dynamic-part {round(dyn,1)}% | paper: LT-I 24.2 LT-U 19.7 "
                 f"LT-UA 23.4 (Chiron negative)"))
-        # Fig 13a latency
+        # Fig 13a latency (percentiles are None when a tier completed
+        # zero requests — keep the row, print nan)
         for tier in ("IW-F", "IW-N"):
-            if tier in rep.ttft:
+            if tier in rep.report["ttft"]:
+                p75 = rep.report["ttft"][tier]["p75"]
                 out.append(csv_line(
                     f"fig13a.ttft_p75.{strat}.{tier}",
-                    round(rep.ttft[tier]["p75"], 2), "s"))
+                    round(p75, 2) if p75 is not None else "nan", "s"))
         # Fig 13b wasted scaling hours
         out.append(csv_line(f"fig13b.wasted_gpu_hours.{strat}",
-                            round(rep.total_wasted_hours(), 1),
+                            round(rep.total_wasted_hours, 1),
                             "paper: SageServe ~70-80% lower than reactive"))
         out.append(csv_line(f"fig13b.scale_out_events.{strat}",
-                            rep.scale_out_events, ""))
-    if "lt-ua" in reports:
-        saved_h = (base.total_instance_hours()
-                   - reports["lt-ua"].total_instance_hours())
+                            rep.report["scale_out_events"], ""))
+    if "lt-ua" in strategies:
+        ltua = results.get(strategy="lt-ua")
+        saved_h = base_h - ltua.total_instance_hours
         weekly = saved_h / spec.scale * 7 * DOLLARS_PER_HOUR
         out.append(csv_line("fig11.extrapolated_weekly_savings_usd",
                             round(weekly / 1e6, 2),
                             "M$/week at paper scale; paper: ~$0.6M/week"))
-        waste_red = 100 * (1 - reports["lt-ua"].total_wasted_hours()
-                           / max(base.total_wasted_hours(), 1e-9))
+        waste_red = 100 * (1 - ltua.total_wasted_hours
+                           / max(base.total_wasted_hours, 1e-9))
         out.append(csv_line("fig13b.waste_reduction_pct.lt-ua",
                             round(waste_red, 1), "paper: ~70-80%"))
     return out

@@ -1,42 +1,51 @@
-"""Fig. 14 (§7.2.5): adding Llama-4 Scout (MoE) as a fifth model."""
+"""Fig. 14 (§7.2.5): adding Llama-4 Scout (MoE) as a fifth model.  A
+two-strategy experiment; the per-model E2E percentiles are a probe."""
 from __future__ import annotations
 
 import math
 
 import numpy as np
 
-from benchmarks.common import BenchSpec, csv_line, make_trace, run_strategy
+from benchmarks.common import BenchSpec, bench_experiment, csv_line
+from repro.api.experiment import run_experiment
 from repro.sim.workload import PAPER_MODELS
 
 
-def run(quick: bool = False):
+def e2e_p95_probe(requests, report):
+    """Per-model P95 E2E over completed requests (MoE vs dense peer)."""
+    out = {}
+    for m in ("llama4-scout", "llama2-70b"):
+        done = [r.e2e for r in requests
+                if r.model == m and not math.isnan(r.e2e)]
+        if done:
+            out[m] = float(np.percentile(done, 95))
+    return out
+
+
+def run(quick: bool = False, jobs=None):
     models = tuple(PAPER_MODELS) + ("llama4-scout",)
     spec = BenchSpec(days=0.4 if quick else 0.75,
                      scale=0.06 if quick else 0.12, models=models)
-    trace = make_trace(spec)
+    results = run_experiment(
+        bench_experiment("fig14", spec, ("reactive", "lt-ua")), jobs=jobs,
+        probes={"e2e_p95": e2e_p95_probe})
     out = []
-    for strat in ("reactive", "lt-ua"):
-        rep = run_strategy(trace, spec, strat)
-        scout = [r for r in trace if r.model == "llama4-scout"
-                 and not math.isnan(r.e2e)]
-        dense = [r for r in trace if r.model == "llama2-70b"
-                 and not math.isnan(r.e2e)]
-        if scout and dense:
+    for res in results:
+        strat = res.strategy
+        p95 = res.extras["e2e_p95"]
+        if "llama4-scout" in p95 and "llama2-70b" in p95:
             out.append(csv_line(
                 f"fig14.e2e_p95.scout.{strat}",
-                round(float(np.percentile([r.e2e for r in scout], 95)), 2),
+                round(p95["llama4-scout"], 2),
                 "s; paper: MoE latency better than dense peer"))
             out.append(csv_line(
                 f"fig14.e2e_p95.llama2.{strat}",
-                round(float(np.percentile([r.e2e for r in dense], 95)), 2),
-                "s"))
-        ih_scout = sum(v for (m, r), v in rep.instance_hours.items()
-                       if m == "llama4-scout")
-        ih_dense = sum(v for (m, r), v in rep.instance_hours.items()
-                       if m == "llama2-70b")
-        out.append(csv_line(f"fig14.instance_hours.scout.{strat}",
-                            round(ih_scout, 1),
-                            "paper: fewer inst-h than dense (higher TPS)"))
-        out.append(csv_line(f"fig14.instance_hours.llama2.{strat}",
-                            round(ih_dense, 1), ""))
+                round(p95["llama2-70b"], 2), "s"))
+        out.append(csv_line(
+            f"fig14.instance_hours.scout.{strat}",
+            round(res.model_instance_hours("llama4-scout"), 1),
+            "paper: fewer inst-h than dense (higher TPS)"))
+        out.append(csv_line(
+            f"fig14.instance_hours.llama2.{strat}",
+            round(res.model_instance_hours("llama2-70b"), 1), ""))
     return out

@@ -1,16 +1,18 @@
 """Fig. 15 (§7.2.6): FCFS / EDF / PF / DPA — Q3 TTFT + SLA violations per
-IW tier.  Run under tight capacity so queues actually form."""
+IW tier.  Run under tight capacity so queues actually form.  One
+experiment with a *scheduler* axis: every variant is the same reactive
+stack admitting in a different order over the identical trace (the
+runner memoizes the workload and hands each run fresh requests)."""
 from __future__ import annotations
 
-import math
+from benchmarks.common import BenchSpec, bench_experiment, csv_line
+from repro.api.experiment import run_experiment
 
-import numpy as np
-
-from benchmarks.common import BenchSpec, csv_line, make_trace, run_strategy
-from repro.sim.types import TTFT_SLA
+SCHEDULERS = ("fcfs", "edf", "pf", "dpa", "wsl")  # wsl = beyond-paper
+#                                                   SLA continuum
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, jobs=None):
     # genuinely overloaded: the two heavy models only, fixed tiny fleet
     # (no spare to scale into) so waiting queues form and the admission
     # ORDER drives TTFT, as in the paper's Fig. 15 setting (their Q3 TTFT
@@ -19,23 +21,17 @@ def run(quick: bool = False):
                      scale=0.14 if quick else 0.17,
                      models=("bloom-176b", "llama2-70b"),
                      initial_instances=2, spot_spare=0)
-    trace = make_trace(spec)
+    results = run_experiment(
+        bench_experiment("fig15", spec, strategies=("reactive",),
+                         schedulers=SCHEDULERS), jobs=jobs)
     out = []
-    for sched in ("fcfs", "edf", "pf", "dpa", "wsl"):  # wsl = beyond-paper SLA continuum
-        for r in trace:   # reset outcomes between runs
-            r.ttft = math.nan
-            r.e2e = math.nan
-            r.priority = 1
-        rep = run_strategy(trace, spec, "reactive", scheduler=sched)
+    for sched in SCHEDULERS:
+        res = results.get(strategy=sched)
         for tier in ("IW-F", "IW-N"):
-            rs = [r for r in trace if r.tier == tier]
-            done = [r for r in rs if not math.isnan(r.ttft)]
-            q3 = (float(np.percentile([r.ttft for r in done], 75))
-                  if done else math.nan)
-            viol = sum(1 for r in rs if math.isnan(r.ttft)
-                       or r.ttft > TTFT_SLA[tier]) / max(len(rs), 1)
+            q3 = res.report["ttft"].get(tier, {}).get("p75")
+            viol = res.report["sla_violations"].get(tier, 0.0)
             out.append(csv_line(f"fig15.q3_ttft.{sched}.{tier}",
-                                round(q3, 2),
+                                round(q3, 2) if q3 is not None else "nan",
                                 "paper: FCFS ~5.6s both; EDF 2.4/6.1; "
                                 "PF 0.9/12.1; DPA 2.1/7.9"))
             out.append(csv_line(f"fig15.sla_violations.{sched}.{tier}",

@@ -1,54 +1,69 @@
 """Fig. 8 + Table 1: Unified vs Siloed pools — instance-hours, memory
-utilization, TTFT/E2E per model."""
+utilization, TTFT/E2E per model.  A two-variant declarative experiment;
+the per-model Table-1 percentiles and the mean memory utilization are
+worker-side probes (request-level data never leaves the run)."""
 from __future__ import annotations
+
+import math
 
 import numpy as np
 
-from benchmarks.common import BenchSpec, csv_line, make_trace, run_strategy
+from benchmarks.common import BenchSpec, bench_experiment, csv_line
+from repro.api.experiment import run_experiment
+
+STRATEGIES = ("siloed", "reactive")
 
 
-def run(quick: bool = False):
+def tab1_probe(requests, report):
+    """Per-model P95 TTFT / E2E over completed IW requests."""
+    out = {}
+    for m in sorted({r.model for r in requests}):
+        done = [r for r in requests if r.model == m and r.tier != "NIW"
+                and not math.isnan(r.e2e)]
+        if done:
+            out[m] = [float(np.percentile([r.ttft for r in done], 95)),
+                      float(np.percentile([r.e2e for r in done], 95))]
+    return out
+
+
+def mem_util_probe(requests, report):
+    us = [u for tr in report.util_trace.values() for (_, u, _) in tr]
+    return float(np.mean(us)) if us else None
+
+
+def run(quick: bool = False, jobs=None):
     spec = BenchSpec(days=0.5 if quick else 1.0,
                      scale=0.08 if quick else 0.15)
-    trace = make_trace(spec)
+    results = run_experiment(
+        bench_experiment("fig8", spec, STRATEGIES), jobs=jobs,
+        probes={"tab1": tab1_probe, "mem_util": mem_util_probe})
     out = []
-    reports = {}
-    tab1 = {}
-    import math
-    for strat in ("siloed", "reactive"):
-        reports[strat] = run_strategy(trace, spec, strat)
-        tab1[strat] = {}
-        for m in spec.models:
-            reqs = [r for r in trace if r.model == m and r.tier != "NIW"
-                    and not math.isnan(r.e2e)]
-            if reqs:
-                tab1[strat][m] = (
-                    float(np.percentile([r.ttft for r in reqs], 95)),
-                    float(np.percentile([r.e2e for r in reqs], 95)))
-    sil, uni = reports["siloed"], reports["reactive"]
+    sil = results.get(strategy="siloed")
+    uni = results.get(strategy="reactive")
     for m in spec.models:
-        ih_s = sum(v for (mm, r), v in sil.instance_hours.items() if mm == m)
-        ih_u = sum(v for (mm, r), v in uni.instance_hours.items() if mm == m)
         out.append(csv_line(f"fig8.instance_hours.siloed.{m}",
-                            round(ih_s, 1), "inst-h"))
+                            round(sil.model_instance_hours(m), 1),
+                            "inst-h"))
         out.append(csv_line(f"fig8.instance_hours.unified.{m}",
-                            round(ih_u, 1), "inst-h"))
-    tot_s, tot_u = sil.total_instance_hours(), uni.total_instance_hours()
+                            round(uni.model_instance_hours(m), 1),
+                            "inst-h"))
+    tot_s = sil.total_instance_hours
+    tot_u = uni.total_instance_hours
     sav = 100 * (1 - tot_u / tot_s)
     out.append(csv_line("fig8.total_savings_pct", round(sav, 1),
                         "paper: unified 34.5% fewer (West US day)"))
-    for strat, rep in reports.items():
-        us = [u for tr in rep.util_trace.values() for (_, u, _) in tr]
-        out.append(csv_line(f"fig8.mem_util_mean.{strat}",
-                            round(float(np.mean(us)), 3), "paper: unified higher"))
-        out.append(csv_line(f"fig8.spot_donated_h.{strat}",
-                            round(rep.total_spot_hours(), 1), "inst-h"))
+    for res in (sil, uni):
+        out.append(csv_line(f"fig8.mem_util_mean.{res.strategy}",
+                            round(res.extras["mem_util"], 3),
+                            "paper: unified higher"))
+        out.append(csv_line(f"fig8.spot_donated_h.{res.strategy}",
+                            round(res.total_spot_hours, 1), "inst-h"))
     # Table 1: P95 TTFT / E2E per model x strategy
-    for strat, vals in tab1.items():
-        for m, (tt, ee) in vals.items():
-            out.append(csv_line(f"tab1.ttft_p95.{strat}.{m}",
+    for res in (sil, uni):
+        for m, (tt, ee) in res.extras["tab1"].items():
+            out.append(csv_line(f"tab1.ttft_p95.{res.strategy}.{m}",
                                 round(tt, 2), "s"))
-            out.append(csv_line(f"tab1.e2e_p95.{strat}.{m}",
+            out.append(csv_line(f"tab1.e2e_p95.{res.strategy}.{m}",
                                 round(ee, 2), "s"))
     assert tot_u <= tot_s * 1.02, "unified must not use more than siloed"
     return out

@@ -1,43 +1,46 @@
 """§7.2.7 ablations: (a) A100 clusters (higher load times -> LT wins
 bigger: paper 28.2% fewer GPU-hours); (b) IW:NIW ratio 9:1 / 3:1 / 1:1
-(paper: 26.3% / ~23% / 22%)."""
+(paper: 26.3% / ~23% / 22%).  Two declarative experiments: (a) swaps
+the hardware via ``ExperimentSpec.profiles`` (profile overrides flow
+into the planner too — θ derives from the deployed hardware); (b) puts
+the IW:NIW mix on the *workload* axis, so both ratios and both
+strategies fan out in one sweep."""
 from __future__ import annotations
 
-from benchmarks.common import BenchSpec, csv_line, make_trace, run_strategy
-from repro.sim.perfmodel import PROFILES
-from repro.sim.workload import WorkloadSpec, generate
+from benchmarks.common import BenchSpec, bench_experiment, csv_line
+from repro.api.experiment import run_experiment
+from repro.sim.workload import WorkloadSpec
 
 
-def _compare(trace, spec, profiles=None):
-    # profile overrides flow into the planner too: θ now derives from
-    # the hardware actually deployed (the seed planned A100 fleets with
-    # H100 throughput), so (a)'s absolute numbers shift slightly
-    reps = {strat: run_strategy(trace, spec, strat, profiles=profiles)
-            for strat in ("reactive", "lt-ua")}
-    sav = 100 * (1 - reps["lt-ua"].total_instance_hours()
-                 / reps["reactive"].total_instance_hours())
-    return sav, reps
-
-
-def run(quick: bool = False):
+def run(quick: bool = False, jobs=None):
     out = []
     spec = BenchSpec(days=0.5 if quick else 1.0,
                      scale=0.08 if quick else 0.15)
+    strategies = ("reactive", "lt-ua")
     # ---- (a) A100 hardware ------------------------------------------------
-    trace = make_trace(spec)
-    a100 = {m: PROFILES[m + "@a100"] for m in spec.models}
-    sav, _ = _compare(trace, spec, profiles=a100)
-    out.append(csv_line("ablation.a100_savings_pct.lt-ua", round(sav, 1),
-                        "paper: 28.2% fewer GPU-hours on A100 (slower "
-                        "model loads amortize forecasting even harder)"))
+    results = run_experiment(
+        bench_experiment("ablation_a100", spec, strategies,
+                         profiles={m: m + "@a100" for m in spec.models}),
+        jobs=jobs)
+    sav = results.deltas(baseline="reactive")
+    out.append(csv_line(
+        "ablation.a100_savings_pct.lt-ua",
+        round(sav["lt-ua/default"]["instance_hours"]["pct"], 1),
+        "paper: 28.2% fewer GPU-hours on A100 (slower "
+        "model loads amortize forecasting even harder)"))
     # ---- (b) IW:NIW mix ----------------------------------------------------
-    for ratio, niw_day in (("9to1", 1.4e6 / 9), ("1to1", 1.4e6)):
-        wspec = WorkloadSpec(days=spec.days, scale=spec.scale, seed=1,
-                             niw_per_region_day=niw_day)
-        tr = generate(wspec)
-        sav, _ = _compare(tr, spec)
-        out.append(csv_line(f"ablation.iw_niw_{ratio}_savings_pct.lt-ua",
-                            round(sav, 1),
-                            "paper: 26.3% @9:1, 22% @1:1 (buffer beta "
-                            "scales with NIW load)"))
+    workloads = {
+        ratio: WorkloadSpec(days=spec.days, scale=spec.scale, seed=1,
+                            niw_per_region_day=niw_day)
+        for ratio, niw_day in (("9to1", 1.4e6 / 9), ("1to1", 1.4e6))}
+    results = run_experiment(
+        bench_experiment("ablation_mix", spec, strategies,
+                         workloads=workloads), jobs=jobs)
+    sav = results.deltas(baseline="reactive")
+    for ratio in workloads:
+        out.append(csv_line(
+            f"ablation.iw_niw_{ratio}_savings_pct.lt-ua",
+            round(sav[f"lt-ua/{ratio}"]["instance_hours"]["pct"], 1),
+            "paper: 26.3% @9:1, 22% @1:1 (buffer beta "
+            "scales with NIW load)"))
     return out

@@ -13,6 +13,12 @@ actuation) against the placement-blind co-optimized plan (PR 3's
                     pays idle min-instance floors forever;
 - ``combined``    — both at once (the default study).
 
+Because each scenario shapes *both* the workload (popularity shifts)
+and the stack (outage windows), the sweep uses the experiment layer's
+explicit-variant form: one ``Variant`` per (scenario, blind|aware),
+grouped by scenario via ``workload_name`` so ``deltas(baseline="blind")``
+pairs each aware run with its blind twin on the identical trace.
+
 Reported: total ``gpu_dollars`` per strategy (the paper's §7.2.1
 accounting), the dollar delta, and per-tier IW SLA-violation fractions
 — the acceptance gate is "placement saves dollars without giving up IW
@@ -20,19 +26,17 @@ SLA attainment".
 """
 from __future__ import annotations
 
-import math
-
-from benchmarks.common import csv_line, reset_trace
-from repro.api import (OutageWindow, PolicySpec, ScenarioSpec, StackSpec,
-                       build_stack)
+from benchmarks.common import csv_line
+from repro.api import OutageWindow, PolicySpec, ScenarioSpec, StackSpec
+from repro.api.experiment import (ExperimentSpec, Variant, run_experiment)
 from repro.sim.workload import (PAPER_MODELS, REGIONS, PopularityShift,
-                                WorkloadSpec, generate)
+                                WorkloadSpec)
 
 SCENARIOS = ("outage", "popshift", "combined")
 
 
 def scenario_inputs(name: str, days: float, scale: float, seed: int = 7):
-    """Trace + ScenarioSpec for one named scenario."""
+    """WorkloadSpec + ScenarioSpec for one named scenario."""
     shifts = ()
     outages = ()
     if name in ("popshift", "combined"):
@@ -45,46 +49,56 @@ def scenario_inputs(name: str, days: float, scale: float, seed: int = 7):
         )
     if name in ("outage", "combined"):
         outages = (OutageWindow("centralus", 6 * 3600.0, 9 * 3600.0),)
-    trace = generate(WorkloadSpec(days=days, scale=scale, seed=seed,
-                                  pop_shifts=shifts))
-    return trace, ScenarioSpec(outages=outages)
+    workload = WorkloadSpec(days=days, scale=scale, seed=seed,
+                            pop_shifts=shifts)
+    return workload, ScenarioSpec(outages=outages)
 
 
-def run_pair(trace, scen: ScenarioSpec, fit_steps: int = 40,
-             initial_instances: int = 3, spot_spare: int = 8):
-    """One placement-blind and one placement-aware run over the same
-    trace/scenario; returns (blind_report, aware_report)."""
-    out = []
-    for aware in (False, True):
-        reset_trace(trace)
-        kw = {"fit_steps": fit_steps, "use_routing": True}
-        if aware:
-            kw["use_placement"] = True
-        spec = StackSpec(
-            models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
-            planner=PolicySpec("sageserve", kw), router="plan",
-            initial_instances=initial_instances, spot_spare=spot_spare,
-            drain_grace=2 * 3600.0, scenario=scen)
-        out.append(build_stack(spec).simulate(
-            trace, name="place" if aware else "blind"))
-    return out[0], out[1]
+def _stack(scen: ScenarioSpec, aware: bool, fit_steps: int = 40,
+           initial_instances: int = 3, spot_spare: int = 8) -> StackSpec:
+    kw = {"fit_steps": fit_steps, "use_routing": True}
+    if aware:
+        kw["use_placement"] = True
+    return StackSpec(
+        models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+        planner=PolicySpec("sageserve", kw), router="plan",
+        initial_instances=initial_instances, spot_spare=spot_spare,
+        drain_grace=2 * 3600.0, scenario=scen)
 
 
-def run(quick: bool = False, scenarios=SCENARIOS) -> None:
-    days, scale = (0.3, 0.015) if quick else (0.5, 0.03)
+def placement_experiment(scenarios, days: float, scale: float,
+                         seed: int = 7) -> ExperimentSpec:
+    """Explicit-variant sweep: (scenario × {blind, aware}), each pair
+    sharing one workload so the comparison runs on the identical trace."""
+    variants = []
     for scen_name in scenarios:
-        trace, scen = scenario_inputs(scen_name, days, scale)
-        blind, place = run_pair(trace, scen)
-        done = sum(1 for r in trace if not math.isnan(r.e2e))
-        csv_line(f"fig_placement.{scen_name}.requests", len(trace),
-                 f"{done / max(len(trace), 1):.3f} completed (aware)")
+        workload, scen = scenario_inputs(scen_name, days, scale, seed)
+        for aware in (False, True):
+            label = "aware" if aware else "blind"
+            variants.append(Variant(
+                name=f"{scen_name}/{label}", stack=_stack(scen, aware),
+                workload=workload, strategy=label,
+                workload_name=scen_name))
+    return ExperimentSpec(name="fig_placement", variants=tuple(variants))
+
+
+def run(quick: bool = False, scenarios=SCENARIOS, jobs=None) -> None:
+    days, scale = (0.3, 0.015) if quick else (0.5, 0.03)
+    results = run_experiment(placement_experiment(scenarios, days, scale),
+                             jobs=jobs)
+    deltas = results.deltas(baseline="blind")
+    for scen_name in scenarios:
+        blind = results.get(f"{scen_name}/blind")
+        place = results.get(f"{scen_name}/aware")
+        csv_line(f"fig_placement.{scen_name}.requests", place.n_requests,
+                 f"{place.completion:.3f} completed (aware)")
         csv_line(f"fig_placement.{scen_name}.gpu_dollars.blind",
-                 round(blind.total_gpu_dollars(), 2))
+                 round(blind.total_gpu_dollars, 2))
         csv_line(f"fig_placement.{scen_name}.gpu_dollars.aware",
-                 round(place.total_gpu_dollars(), 2))
-        sav = place.savings_vs(blind)
+                 round(place.total_gpu_dollars, 2))
+        sav = deltas[f"{scen_name}/aware"]["gpu_dollars"]
         csv_line(f"fig_placement.{scen_name}.savings_dollars",
-                 round(sav["dollars"], 2), f"{sav['pct']:.1f}%")
+                 round(sav["delta"], 2), f"{sav['pct']:.1f}%")
         for tier in ("IW-F", "IW-N"):
             csv_line(
                 f"fig_placement.{scen_name}.sla_viol.{tier}",
@@ -93,25 +107,27 @@ def run(quick: bool = False, scenarios=SCENARIOS) -> None:
     print("# fig_placement complete", flush=True)
 
 
-def smoke() -> int:
+def smoke(jobs=None) -> int:
     """Tiny outage + popularity-shift run for CI (scripts/check.sh):
     placement-aware must at least match the blind plan on dollars and
     stay near its IW SLA attainment."""
     import sys
-    trace, scen = scenario_inputs("combined", days=0.3, scale=0.015)
-    blind, place = run_pair(trace, scen)
-    done = sum(1 for r in trace if not math.isnan(r.e2e))
-    frac = done / max(len(trace), 1)
+    results = run_experiment(
+        placement_experiment(("combined",), days=0.3, scale=0.015),
+        jobs=jobs)
+    blind = results.get("combined/blind")
+    place = results.get("combined/aware")
+    frac = place.completion
     csv_line("placement_smoke.completion", round(frac, 4))
     csv_line("placement_smoke.gpu_dollars.blind",
-             round(blind.total_gpu_dollars(), 2))
+             round(blind.total_gpu_dollars, 2))
     csv_line("placement_smoke.gpu_dollars.aware",
-             round(place.total_gpu_dollars(), 2))
+             round(place.total_gpu_dollars, 2))
     if frac < 0.97:
         print(f"FAILED placement smoke: completion {frac:.1%}",
               file=sys.stderr)
         return 1
-    if place.total_gpu_dollars() > blind.total_gpu_dollars():
+    if place.total_gpu_dollars > blind.total_gpu_dollars:
         print("FAILED placement smoke: placement-aware spent more than "
               "placement-blind", file=sys.stderr)
         return 1

@@ -2,44 +2,52 @@
 
 Prints ``name,value,derived`` CSV.  ``--quick`` shrinks traces for CI;
 ``--smoke`` runs a <60 s strategy sweep over a tiny trace through the
-declarative API — enough to catch control-plane regressions without the
-full workloads (wired into scripts/check.sh).
+declarative experiment runner — enough to catch control-plane
+regressions without the full workloads (wired into scripts/check.sh).
+``--jobs N`` fans variants out over N worker processes (default: CPU
+count); ``--out PATH`` persists the smoke sweep's JSON result artifact.
 """
 from __future__ import annotations
 
 import argparse
-import math
+import inspect
+import os
 import sys
 import time
 
 
-def smoke() -> int:
-    """Tiny end-to-end sweep: every strategy through build_stack."""
-    from benchmarks.common import (BenchSpec, STRATEGIES, csv_line,
-                                   make_trace, run_strategy)
+def smoke(jobs=None, out=None) -> int:
+    """Tiny end-to-end sweep: every strategy through the experiment
+    runner (one declarative spec, parallel variants, fresh request
+    copies per run).  Completion and drop counts derive from the
+    returned Reports — the shared trace is never re-scanned."""
+    from benchmarks.common import (BenchSpec, STRATEGIES, bench_experiment,
+                                   csv_line)
+    from repro.api.experiment import run_experiment
     spec = BenchSpec(days=0.1, scale=0.02, initial_instances=3,
                      spot_spare=8)
-    trace = make_trace(spec)
+    exp = bench_experiment("smoke", spec, STRATEGIES)
+    results = run_experiment(exp, jobs=jobs, out=out)
     print("name,value,derived", flush=True)
-    csv_line("smoke.requests", len(trace), "trace size")
+    n = results.results[0].n_requests
+    csv_line("smoke.requests", n, "trace size")
     hours = {}
     for strat in STRATEGIES:
-        t0 = time.time()
-        rep = run_strategy(trace, spec, strat)
-        done = sum(1 for r in trace if not math.isnan(r.e2e))
-        frac = done / max(len(trace), 1)
-        hours[strat] = rep.total_instance_hours()
+        res = results.get(strategy=strat)
+        frac = res.completion
+        hours[strat] = res.total_instance_hours
         csv_line(f"smoke.completion.{strat}", round(frac, 4), "fraction")
         csv_line(f"smoke.instance_hours.{strat}",
                  round(hours[strat], 1),
-                 f"{time.time() - t0:.1f}s wall")
+                 f"{res.wall_s:.1f}s wall")
         if frac < 0.9:
             print(f"FAILED smoke: {strat} completed only {frac:.1%}",
                   file=sys.stderr)
             return 1
-        if rep.retry_dropped > 0.01 * len(trace):
-            print(f"FAILED smoke: {strat} dropped {rep.retry_dropped} "
-                  f"requests on retry", file=sys.stderr)
+        if res.report["retry_dropped"] > 0.01 * n:
+            print(f"FAILED smoke: {strat} dropped "
+                  f"{res.report['retry_dropped']} requests on retry",
+                  file=sys.stderr)
             return 1
     if hours["reactive"] > hours["siloed"] * 1.05:
         print("FAILED smoke: unified reactive used more instance-hours "
@@ -49,11 +57,24 @@ def smoke() -> int:
     return 0
 
 
+def _call_run(mod, quick: bool, jobs):
+    """Pass --jobs through to benchmarks whose run() takes it (the
+    experiment-ported ones); legacy signatures get quick only."""
+    if "jobs" in inspect.signature(mod.run).parameters:
+        return mod.run(quick=quick, jobs=jobs)
+    return mod.run(quick=quick)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny <60s strategy sweep for CI")
+    ap.add_argument("--jobs", type=int, default=None, metavar="N",
+                    help="worker processes for experiment sweeps "
+                         "(default: CPU count)")
+    ap.add_argument("--out", default=None, metavar="RESULTS.json",
+                    help="write the smoke sweep's result artifact here")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     ap.add_argument("--scenario", default=None, metavar="NAME",
@@ -63,8 +84,9 @@ def main(argv=None) -> int:
                     help="also run the simulator perf benchmark "
                          "(benchmarks.perf_sim) and write its JSON here")
     args = ap.parse_args(argv)
+    jobs = args.jobs if args.jobs else (os.cpu_count() or 1)
     if args.smoke:
-        rc = smoke()
+        rc = smoke(jobs=jobs, out=args.out)
         if rc == 0 and args.bench_out:
             from benchmarks import perf_sim
             perf_sim.bench(repeats=1, out=args.bench_out)
@@ -78,7 +100,7 @@ def main(argv=None) -> int:
             return 2
         print("name,value,derived", flush=True)
         fig_placement.run(quick=args.quick,
-                          scenarios=(args.scenario,))
+                          scenarios=(args.scenario,), jobs=jobs)
         return 0
 
     from benchmarks import (fig8_unified_vs_siloed, fig11_instance_hours,
@@ -111,7 +133,7 @@ def main(argv=None) -> int:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
-            mod.run(quick=args.quick)
+            _call_run(mod, args.quick, jobs)
         except Exception as e:
             failures.append((name, e))
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)

@@ -2,6 +2,10 @@
 LT-UA / LT-UA+plan-routing / Chiron — reproduces the shape of Fig. 8 +
 Fig. 11 of the paper, with dollar-cost columns (α = $98.32/h, §7.2.1).
 
+The whole sweep is one declarative ``ExperimentSpec`` executed by the
+parallel experiment runner; ``--jobs N`` fans the strategies out over N
+worker processes and ``--out`` persists the JSON result artifact.
+
     PYTHONPATH=src python examples/autoscale_simulation.py [--scale 0.15]
 """
 import argparse
@@ -12,36 +16,41 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)   # for benchmarks.common
 
-from benchmarks.common import (STRATEGIES, BenchSpec, make_trace,
-                               run_strategy)
-
 
 def main():
+    from benchmarks.common import STRATEGIES, BenchSpec, bench_experiment
+    from repro.api.experiment import run_experiment
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.1)
     ap.add_argument("--days", type=float, default=1.0)
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="worker processes (default: CPU count)")
+    ap.add_argument("--out", default=None, metavar="RESULTS.json",
+                    help="persist the result artifact")
     args = ap.parse_args()
 
     spec = BenchSpec(days=args.days, scale=args.scale)
-    trace = make_trace(spec)
-    print(f"{len(trace)} requests, {args.days} day(s), scale {args.scale}\n")
-    reports = {}
-    for strat in STRATEGIES:
-        reports[strat] = run_strategy(trace, spec, strat)
-        print(reports[strat].summary())
-        print()
-    base = reports["reactive"]
-    base_h = base.total_instance_hours()
+    exp = bench_experiment("autoscale", spec, STRATEGIES)
+    results = run_experiment(exp, jobs=args.jobs, out=args.out)
+
+    n = results.results[0].n_requests
+    print(f"{n} requests, {args.days} day(s), scale {args.scale}\n")
+    deltas = results.deltas(baseline="reactive")
     print("=== instance-hours & dollars vs Unified Reactive ===")
     print(f"  {'strategy':10s} {'inst-h':>9s} {'gpu-$':>11s} "
-          f"{'wasted-$':>9s} {'savings':>14s}")
-    for strat, rep in reports.items():
-        d = 100 * (1 - rep.total_instance_hours() / base_h)
-        sav = rep.savings_vs(base)
-        print(f"  {strat:10s} {rep.total_instance_hours():8.1f}h "
-              f"${rep.total_gpu_dollars():10,.0f} "
-              f"${rep.total_wasted_dollars():8,.0f} "
-              f"${sav['dollars']:9,.0f} ({d:+.1f}%)")
+          f"{'IW-F viol':>9s} {'savings':>16s}")
+    for res in results:
+        name = res.strategy
+        d = deltas.get(res.variant)
+        sav = (f"${d['gpu_dollars']['delta']:9,.0f} "
+               f"({d['instance_hours']['pct']:+.1f}%)" if d else
+               f"{'—':>16s}")
+        print(f"  {name:10s} {res.total_instance_hours:8.1f}h "
+              f"${res.total_gpu_dollars:10,.0f} "
+              f"{res.sla_violations.get('IW-F', 0.0):8.1%} {sav}")
+    if args.out:
+        print(f"\nresult artifact: {args.out}")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ fi
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
-echo "== smoke benchmark (tiny trace, all strategies via build_stack) =="
+echo "== smoke sweep (tiny trace, all strategies through the experiment"
+echo "   runner; --jobs defaults to the CPU count) =="
 python -m benchmarks.run --smoke
 
 echo "== perf smoke (simulator hot path, events/sec) =="

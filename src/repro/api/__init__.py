@@ -4,7 +4,9 @@ The import surface is layered to stay cycle-free: ``registry``,
 ``protocols``, ``signals`` and ``spec`` load eagerly (core modules
 import them to register components); the stack builder — which imports
 the simulator and the core built-ins — loads lazily on first access of
-``build_stack`` / ``ServingStack`` / ``simulate``.
+``build_stack`` / ``ServingStack`` / ``simulate``, and the experiment
+layer (``ExperimentSpec`` / ``run_experiment`` / ``ResultSet``, which
+imports the workload generator) likewise on first access.
 """
 from repro.api.plan import (PlacementAction, PlacementPlan,
                             PlacementState, Plan, RoutingPlan)
@@ -15,20 +17,26 @@ from repro.api.signals import BacklogSignal, Signal, UtilizationSignal
 from repro.api.spec import (OutageWindow, PolicySpec, ScenarioSpec,
                             StackSpec)
 
-_LAZY = ("BuildContext", "ServingStack", "build_stack", "simulate")
+_LAZY_STACK = ("BuildContext", "ServingStack", "build_stack", "simulate")
+_LAZY_EXPERIMENT = ("ExperimentSpec", "ResultSet", "RunResult", "Variant",
+                    "derive_seed", "run_experiment")
 
 __all__ = [
-    "BacklogSignal", "BuildContext", "Forecaster", "GlobalPlanner",
-    "OutageWindow", "PlacementAction", "PlacementPlan", "PlacementState",
-    "Plan", "PolicySpec", "QueuePolicy", "RequestLike", "Router",
-    "RoutingPlan", "Scaler", "ScenarioSpec", "Scheduler", "ServingStack",
-    "Signal", "StackSpec", "UtilizationSignal", "build_stack", "known",
-    "register", "resolve", "simulate",
+    "BacklogSignal", "BuildContext", "ExperimentSpec", "Forecaster",
+    "GlobalPlanner", "OutageWindow", "PlacementAction", "PlacementPlan",
+    "PlacementState", "Plan", "PolicySpec", "QueuePolicy", "RequestLike",
+    "ResultSet", "Router", "RoutingPlan", "RunResult", "Scaler",
+    "ScenarioSpec", "Scheduler", "ServingStack", "Signal", "StackSpec",
+    "UtilizationSignal", "Variant", "build_stack", "derive_seed", "known",
+    "register", "resolve", "run_experiment", "simulate",
 ]
 
 
 def __getattr__(name):
-    if name in _LAZY:
+    if name in _LAZY_STACK:
         from repro.api import stack
         return getattr(stack, name)
+    if name in _LAZY_EXPERIMENT:
+        from repro.api import experiment
+        return getattr(experiment, name)
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

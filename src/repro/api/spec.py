@@ -25,6 +25,17 @@ from repro.sim.types import TTFT_SLA
 SpecLike = Union[None, str, "PolicySpec", Mapping, Tuple[str, Mapping]]
 
 
+def strict_from_dict(cls, d: Mapping):
+    """Shared ``from_dict`` body for the declarative spec dataclasses:
+    reject unknown keys loudly, then construct."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise KeyError(
+            f"unknown {cls.__name__} fields: {sorted(unknown)}")
+    return cls(**dict(d))
+
+
 @dataclasses.dataclass(frozen=True)
 class PolicySpec:
     """Registry name + constructor kwargs for one pluggable component."""
@@ -257,8 +268,4 @@ class StackSpec:
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "StackSpec":
-        names = {f.name for f in dataclasses.fields(cls)}
-        unknown = set(d) - names
-        if unknown:
-            raise KeyError(f"unknown StackSpec fields: {sorted(unknown)}")
-        return cls(**{k: v for k, v in d.items()})
+        return strict_from_dict(cls, d)

@@ -71,6 +71,8 @@ class PopularityShift:
     regions: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
+        if self.regions is not None:
+            object.__setattr__(self, "regions", tuple(self.regions))
         if self.mult < 0:
             raise ValueError(
                 f"PopularityShift[{self.model!r}]: mult must be >= 0 "
@@ -80,6 +82,12 @@ class PopularityShift:
                 f"PopularityShift[{self.model!r}]: end_hour "
                 f"{self.end_hour} must be past start_hour "
                 f"{self.start_hour}")
+
+    def to_dict(self) -> Dict:
+        return {"model": self.model, "start_hour": self.start_hour,
+                "end_hour": self.end_hour, "mult": self.mult,
+                "regions": (None if self.regions is None
+                            else list(self.regions))}
 
 
 @dataclasses.dataclass
@@ -98,6 +106,42 @@ class WorkloadSpec:
     prompt_lognorm: Tuple[float, float] = (7.2, 1.0)   # median ~1.3k
     output_lognorm: Tuple[float, float] = (5.2, 0.9)   # median ~180
     pop_shifts: Tuple[PopularityShift, ...] = ()       # scenario layer
+
+    def __post_init__(self):
+        # normalize sequence fields to tuples so specs compare equal
+        # across dict round-trips (JSON lists vs constructor tuples) and
+        # canonicalize identically for trace memoization keys
+        self.models = tuple(self.models)
+        self.regions = tuple(self.regions)
+        self.burst_hours = tuple(self.burst_hours)
+        self.prompt_lognorm = tuple(self.prompt_lognorm)
+        self.output_lognorm = tuple(self.output_lognorm)
+        self.pop_shifts = tuple(
+            s if isinstance(s, PopularityShift) else PopularityShift(**s)
+            for s in self.pop_shifts)
+
+    # ------------------------------------------------------------- dict I/O
+    def to_dict(self) -> Dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "pop_shifts":
+                v = [s.to_dict() for s in v]
+            elif isinstance(v, tuple):
+                v = list(v)
+            out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d) -> "WorkloadSpec":
+        # same strict contract as repro.api.spec.strict_from_dict, kept
+        # inline: the sim layer does not import the api layer
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise KeyError(
+                f"unknown WorkloadSpec fields: {sorted(unknown)}")
+        return cls(**dict(d))
 
 
 def _diurnal_vec(hour_of_week: np.ndarray) -> np.ndarray:
