@@ -1,0 +1,55 @@
+"""Per-rule violation counts from reprolint, for trend tracking.
+
+Runs the same engine as ``python -m repro.analysis --json`` and prints
+a per-rule table (unsuppressed + suppressed), optionally writing a JSON
+artifact next to the other ``BENCH_*.json`` files::
+
+    python -m benchmarks.lint_report [--paths src ...] [--out BENCH_lint.json]
+
+The intended trend: unsuppressed counts stay at zero (check.sh gates on
+it); the *suppressed* counts are the debt ledger — growth there means
+contracts are being waived faster than fixed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.analysis import ALL_RULES, RULE_DOCS, run_lint
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--paths", nargs="*", default=None,
+                        help="paths to lint (default: the repro tree)")
+    parser.add_argument("--out", default=None,
+                        help="write the JSON report here")
+    args = parser.parse_args(argv)
+
+    result = run_lint(args.paths)
+    sup_counts: dict = {}
+    for v in result.suppressed:
+        sup_counts[v.rule] = sup_counts.get(v.rule, 0) + 1
+
+    print(f"{'rule':6} {'open':>5} {'suppressed':>11}  description")
+    for mod in ALL_RULES:
+        rid = mod.RULE_ID
+        print(f"{rid:6} {result.counts.get(rid, 0):5d} "
+              f"{sup_counts.get(rid, 0):11d}  {RULE_DOCS[rid]}")
+    total = len(result.violations)
+    print(f"{'total':6} {total:5d} {len(result.suppressed):11d}  "
+          f"({result.files_checked} files)")
+
+    if args.out:
+        report = {"files_checked": result.files_checked,
+                  "counts": result.counts,
+                  "suppressed_counts": dict(sorted(sup_counts.items())),
+                  "violations": [v.to_json() for v in result.violations]}
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=1, sort_keys=True)
+        print(f"wrote {args.out}")
+    return 1 if result.violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,9 @@ if [[ "${1:-}" == "--fast" ]]; then
   PYTEST_ARGS+=(-x)
 fi
 
+echo "== static analysis (reprolint, docs/ANALYSIS.md) =="
+python -m repro.analysis src
+
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"
 

@@ -1,0 +1,19 @@
+"""reprolint — stdlib-ast static analysis for the duck-typed control
+plane.
+
+Usage::
+
+    python -m repro.analysis [--json] [paths...]
+
+or programmatically::
+
+    from repro.analysis import run_lint
+    result = run_lint(["src"])
+    assert not result.violations
+
+See docs/ANALYSIS.md for the rule catalog and suppression syntax.
+"""
+from repro.analysis.core import (LintResult, Violation, run_lint)
+from repro.analysis.rules import ALL_RULES, RULE_DOCS
+
+__all__ = ["ALL_RULES", "LintResult", "RULE_DOCS", "Violation", "run_lint"]

@@ -1,0 +1,53 @@
+"""CLI entry point: ``python -m repro.analysis [--json] [paths]``.
+
+Exits 0 when no unsuppressed violations are found, 1 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import ALL_RULES, RULE_DOCS, run_lint
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: AST-based contract checker "
+                    "(see docs/ANALYSIS.md)")
+    parser.add_argument("paths", nargs="*",
+                        help="files or directories to lint "
+                             "(default: the repro source tree)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit machine-readable JSON")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule ids to run "
+                             "(default: all)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for mod in ALL_RULES:
+            print(f"{mod.RULE_ID}: {RULE_DOCS[mod.RULE_ID]}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    result = run_lint(args.paths or None, rules=rules)
+
+    if args.as_json:
+        print(json.dumps(result.to_json(), indent=1, sort_keys=True))
+    else:
+        for v in result.violations:
+            print(v.render())
+        n = len(result.violations)
+        print(f"reprolint: {result.files_checked} file(s), "
+              f"{n} violation(s), {len(result.suppressed)} suppressed")
+    return 1 if result.violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

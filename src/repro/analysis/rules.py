@@ -1,0 +1,24 @@
+"""Rule registry: every reprolint rule module, in report order.
+
+A rule module exposes ``RULE_ID: str`` and
+``check(model: ProjectModel) -> List[Violation]``.  To add a rule, drop
+a ``rules_<name>.py`` module next to this file and append it here (see
+docs/ANALYSIS.md).
+"""
+from __future__ import annotations
+
+from repro.analysis import (rules_capability, rules_determinism, rules_jax,
+                            rules_readmutation, rules_registry,
+                            rules_roundtrip)
+
+ALL_RULES = (
+    rules_registry,       # R1 registry/protocol conformance
+    rules_roundtrip,      # R2 spec round-trip completeness
+    rules_capability,     # R3 capability-probe integrity
+    rules_determinism,    # R4 determinism hazards
+    rules_readmutation,   # R5 defaultdict read-path mutation
+    rules_jax,            # R6 JAX/Pallas hazards
+)
+
+RULE_DOCS = {mod.RULE_ID: (mod.__doc__ or "").strip().splitlines()[0]
+             for mod in ALL_RULES}

@@ -1,0 +1,159 @@
+"""R6 — JAX/Pallas hazards.
+
+Three device-interop hazards in modules that import jax:
+
+- ``.item()`` (or ``float(jnp...)``) inside a ``for``/``while`` loop —
+  each call is a device->host sync; hot loops should stay on-device and
+  sync once at the end;
+- a ``jax.jit`` reference inside a function body — a fresh jitted
+  callable per call retraces every time; jit at module level (or cache
+  the jitted function);
+- ``pallas_call`` under a jit-decorated function whose ``grid=`` refers
+  to a function parameter not listed in ``static_argnames`` — the grid
+  must be static at trace time.
+
+Measurement-only paths (``train/loop.py``, ``launch/``, benchmarks) are
+allowlisted: they intentionally sync and re-jit.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.core import Violation
+from repro.analysis.project import (ModuleInfo, ProjectModel, dotted_name,
+                                    is_measurement_path)
+
+RULE_ID = "R6"
+
+
+def _jax_aliases(mod: ModuleInfo) -> Set[str]:
+    return {local for local, target in mod.import_aliases.items()
+            if target == "jax" or target.startswith("jax.")}
+
+
+def _is_jit_ref(node: ast.AST, jax_names: Set[str]) -> bool:
+    dotted = dotted_name(node)
+    if not dotted:
+        return False
+    root = dotted.split(".")[0]
+    return dotted.endswith(".jit") and root in jax_names
+
+
+def _host_sync_violations(mod: ModuleInfo,
+                          jax_names: Set[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for loop in ast.walk(mod.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        for sub in ast.walk(loop):
+            if not isinstance(sub, ast.Call):
+                continue
+            if isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr == "item" and not sub.args:
+                out.append(Violation(
+                    RULE_ID, mod.display, sub.lineno, sub.col_offset,
+                    ".item() inside a loop forces a device->host sync "
+                    "per iteration; accumulate on-device and sync once"))
+            elif isinstance(sub.func, ast.Name) and sub.func.id == "float" \
+                    and sub.args and isinstance(sub.args[0], ast.Call):
+                inner = dotted_name(sub.args[0].func)
+                if inner and inner.split(".")[0] in jax_names:
+                    out.append(Violation(
+                        RULE_ID, mod.display, sub.lineno, sub.col_offset,
+                        f"float({inner}(...)) inside a loop forces a "
+                        f"device->host sync per iteration"))
+    return out
+
+
+def _jit_in_function_violations(mod: ModuleInfo,
+                                jax_names: Set[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # `self._step = jax.jit(...)` in a body is the cache-once idiom
+        # (one traced callable per instance) — exempt attr-target assigns
+        cached = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) \
+                    and any(isinstance(t, ast.Attribute)
+                            for t in sub.targets):
+                cached.update(id(n) for n in ast.walk(sub.value))
+        for stmt in fn.body:  # body only — decorators are fine
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Attribute) \
+                        and isinstance(sub.ctx, ast.Load) \
+                        and id(sub) not in cached \
+                        and _is_jit_ref(sub, jax_names):
+                    out.append(Violation(
+                        RULE_ID, mod.display, sub.lineno, sub.col_offset,
+                        f"jax.jit referenced inside {fn.name}() builds a "
+                        f"fresh traced callable per call (retrace every "
+                        f"time); jit once at module level or cache it"))
+    return out
+
+
+def _jit_decorator(fn, jax_names: Set[str]) -> Optional[ast.AST]:
+    for dec in fn.decorator_list:
+        for sub in ast.walk(dec):
+            if _is_jit_ref(sub, jax_names):
+                return dec
+    return None
+
+
+def _static_argnames(dec: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for sub in ast.walk(dec):
+        if not isinstance(sub, ast.Call):
+            continue
+        for kw in sub.keywords:
+            if kw.arg == "static_argnames":
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) \
+                            and isinstance(el.value, str):
+                        names.add(el.value)
+    return names
+
+
+def _pallas_grid_violations(mod: ModuleInfo,
+                            jax_names: Set[str]) -> List[Violation]:
+    out: List[Violation] = []
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        dec = _jit_decorator(fn, jax_names)
+        if dec is None:
+            continue
+        static = _static_argnames(dec)
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)} - static
+        for sub in ast.walk(fn):
+            if not (isinstance(sub, ast.Call)
+                    and dotted_name(sub.func).endswith("pallas_call")):
+                continue
+            for kw in sub.keywords:
+                if kw.arg != "grid":
+                    continue
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Name) and el.id in params:
+                        out.append(Violation(
+                            RULE_ID, mod.display, el.lineno, el.col_offset,
+                            f"pallas_call grid uses parameter {el.id!r} "
+                            f"of jitted {fn.name}() — grid must be "
+                            f"static; add it to static_argnames"))
+    return out
+
+
+def check(model: ProjectModel) -> List[Violation]:
+    out: List[Violation] = []
+    for mod in model.scoped_modules():
+        if is_measurement_path(mod.display):
+            continue
+        jax_names = _jax_aliases(mod)
+        if not jax_names:
+            continue
+        out.extend(_host_sync_violations(mod, jax_names))
+        out.extend(_jit_in_function_violations(mod, jax_names))
+        out.extend(_pallas_grid_violations(mod, jax_names))
+    return out

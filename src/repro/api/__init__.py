@@ -8,6 +8,7 @@ the simulator and the core built-ins — loads lazily on first access of
 layer (``ExperimentSpec`` / ``run_experiment`` / ``ResultSet``, which
 imports the workload generator) likewise on first access.
 """
+from repro.api.capabilities import CAPABILITIES, capability
 from repro.api.plan import (PlacementAction, PlacementPlan,
                             PlacementState, Plan, RoutingPlan)
 from repro.api.protocols import (Forecaster, GlobalPlanner, QueuePolicy,
@@ -22,7 +23,8 @@ _LAZY_EXPERIMENT = ("ExperimentSpec", "ResultSet", "RunResult", "Variant",
                     "derive_seed", "run_experiment")
 
 __all__ = [
-    "BacklogSignal", "BuildContext", "ExperimentSpec", "Forecaster",
+    "BacklogSignal", "BuildContext", "CAPABILITIES", "ExperimentSpec",
+    "Forecaster", "capability",
     "GlobalPlanner", "OutageWindow", "PlacementAction", "PlacementPlan",
     "PlacementState", "Plan", "PolicySpec", "QueuePolicy", "RequestLike",
     "ResultSet", "Router", "RoutingPlan", "RunResult", "Scaler",

@@ -17,7 +17,7 @@ benchmarks, live serving) can pass plans around freely.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Mapping, Optional, Tuple
 
 Key = Tuple[str, str]  # (model, region)
 
@@ -84,6 +84,11 @@ class PlacementAction:
     def effective_at(self) -> float:
         return self.issued_at + self.lead_time
 
+    def to_dict(self) -> Dict:
+        return {"model": self.model, "region": self.region,
+                "deploy": self.deploy, "issued_at": self.issued_at,
+                "lead_time": self.lead_time}
+
 
 @dataclasses.dataclass
 class PlacementPlan:
@@ -98,6 +103,26 @@ class PlacementPlan:
 
     def is_placed(self, model: str, region: str) -> bool:
         return self.placed.get((model, region), True)
+
+    def to_dict(self) -> Dict:
+        """JSON-safe form: tuple keys become [model, region, placed]
+        triples, actions nest their own dicts."""
+        return {"placed": [[m, r, bool(v)] for (m, r), v
+                           in self.placed.items()],
+                "actions": [a.to_dict() for a in self.actions]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PlacementPlan":
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise KeyError(
+                f"PlacementPlan.from_dict: unknown keys {sorted(unknown)}")
+        return cls(
+            placed={(m, r): bool(v) for m, r, v in d.get("placed", ())},
+            actions=[a if isinstance(a, PlacementAction)
+                     else PlacementAction(**a)
+                     for a in d.get("actions", ())])
 
     def validate(self) -> None:
         for a in self.actions:

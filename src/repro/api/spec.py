@@ -107,12 +107,15 @@ class ScenarioSpec:
                 "region_caps": dict(self.region_caps)}
 
     @classmethod
+    def from_dict(cls, d: Mapping) -> "ScenarioSpec":
+        return strict_from_dict(cls, d)
+
+    @classmethod
     def coerce(cls, v) -> Optional["ScenarioSpec"]:
         if v is None or isinstance(v, cls):
             return v
         if isinstance(v, Mapping):
-            return cls(outages=tuple(v.get("outages", ())),
-                       region_caps=dict(v.get("region_caps", {})))
+            return cls.from_dict(v)
         raise TypeError(f"cannot interpret {v!r} as a ScenarioSpec")
 
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.api.capabilities import capability
 from repro.api.registry import resolve
 from repro.api.spec import StackSpec
 from repro.control.cost import CostModel
@@ -65,8 +66,8 @@ class ServingStack:
         spec = self.spec
         initial = spec.initial_instances
         if initial is None:
-            sizer = getattr(self.scaler, "initial_instances", None)
-            initial = sizer() if callable(sizer) else 20
+            sizer = capability(self.scaler, "initial_instances")
+            initial = sizer() if sizer else 20
         return SimConfig(
             policy=self.scaler,
             scheduler=self.scheduler,

@@ -39,5 +39,9 @@ class CostModel:
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "CostModel":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise KeyError(
+                f"CostModel.from_dict: unknown keys {sorted(unknown)}")
         return cls(alpha=float(d.get("alpha", DEFAULT_DOLLARS_PER_HOUR)),
                    rates=dict(d.get("rates", {})))

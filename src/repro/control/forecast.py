@@ -273,7 +273,9 @@ class BatchForecastEngine:
         Returns {key: forecast array}; too-short keys are absent."""
         by_len: Dict[int, list] = {}
         series: Dict[Key, np.ndarray] = {}
-        for key, raw in history.items():
+        # sorted: batch composition (and thus emitted plans) must not
+        # depend on the caller's dict insertion order
+        for key, raw in sorted(history.items()):
             y = np.asarray(raw, np.float32)
             if len(y) < self.min_history():
                 continue
@@ -311,7 +313,7 @@ class BatchForecastEngine:
         """Reference path: one cold ``ARIMAForecaster`` per series.
         Used by the equivalence tests and the perf probe's baseline."""
         out: Dict[Key, np.ndarray] = {}
-        for key, raw in history.items():
+        for key, raw in sorted(history.items()):
             y = np.asarray(raw, np.float32)
             if len(y) < self.min_history():
                 continue

@@ -58,7 +58,7 @@ def _solve_milp(c, A_ub, b_ub, A_eq, b_eq, bounds, integrality,
     x = np.where(integrality, np.round(res.x), res.x)
     obj = float(c @ x)
     # HiGHS reports its own bound; fall back to gap 0 when absent
-    bound = getattr(res, "mip_dual_bound", None)
+    bound = getattr(res, "mip_dual_bound", None)  # reprolint: disable=R3 -- scipy OptimizeResult attr, set only by the HiGHS MIP path; external type, not a project capability
     gap = _rel_gap(obj, bound) if bound is not None else 0.0
     status = "optimal" if gap <= max(mip_rel_gap, 1e-9) else "feasible"
     return ILPResult(x, obj, status, 1, gap)

@@ -108,6 +108,7 @@ class SageServeController:
         self.placement_state: Optional[PlacementState] = None
         self._weights_local: set = set()
         self._staged_deploys: Dict[Key, float] = {}   # key -> effective_at
+        self._blocks: Dict[Key, Tuple[float, float]] = {}  # outage windows
 
     # ---------------------------------------------------------- placement
     def set_placement_state(self, state: PlacementState) -> None:
@@ -154,7 +155,8 @@ class SageServeController:
         fit = (self.engine.fit_forecast if self.cfg.batched
                else self.engine.fit_forecast_serial)
         fitted = fit(history, self.cfg.horizon_windows)
-        for key, series in history.items():
+        # sorted: peak emission order must not depend on caller dict order
+        for key, series in sorted(history.items()):
             fc = fitted.get(key)
             if fc is None:
                 # not enough history: persist current level
@@ -287,7 +289,7 @@ class SageServeController:
         drain immediately when demand left, or — for evacuations ahead
         of a known outage — at the moment the region actually becomes
         unusable, so capacity keeps serving until the outage hits."""
-        blocks = getattr(self, "_blocks", {})
+        blocks = self._blocks
         staged = self._staged_deploys
         for key in [k for k, eff in staged.items() if eff <= now]:
             del staged[key]   # actuated by now: cluster state has it

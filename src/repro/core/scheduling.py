@@ -96,7 +96,7 @@ def order_wsl(reqs: Sequence, now: float,
 
     def key(r):
         slack = r.ttft_deadline - now
-        wt = getattr(r, "sla_weight", None) or w.get(r.tier, 1.0)
+        wt = getattr(r, "sla_weight", None) or w.get(r.tier, 1.0)  # reprolint: disable=R3 -- optional per-request extension attr; not added to the __slots__ Request (memory at 10M-request scale)
         return (_is_bg(r), slack / wt, r.arrival)
 
     return sorted(reqs, key=key)

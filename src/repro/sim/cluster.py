@@ -130,7 +130,9 @@ class Endpoint:
     def drained_idle(self) -> List[Instance]:
         """Draining instances that have gone idle — O(draining), not
         O(fleet), so the per-tick reap scan stays cheap."""
-        return [self.instances[iid] for iid in self._draining
+        # sorted: set order is hash-seed dependent, and reap order feeds
+        # the spot-pool free list (and thus future warm-VM selection)
+        return [self.instances[iid] for iid in sorted(self._draining)
                 if self.instances[iid].idle]
 
     @property

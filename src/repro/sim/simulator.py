@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.api.capabilities import capability
 from repro.api.plan import Plan
 from repro.api.registry import resolve
 from repro.api.signals import BacklogSignal
@@ -182,15 +183,13 @@ class Simulation:
         # routers may advertise a pure home-first threshold (see
         # ThresholdRouter.home_threshold): below it the home region always
         # wins, so the per-arrival utils map can be skipped entirely
-        home_thr = getattr(self.router, "home_threshold", None)
-        self._home_thr = home_thr() if callable(home_thr) else None
+        home_thr = capability(self.router, "home_threshold")
+        self._home_thr = home_thr() if home_thr else None
         # plan-aware routers advertise per-request deterministic routing
-        # (hash-based ω splitting) and a plan feed — both duck-typed so
-        # the threshold-router hot path stays untouched
-        rr = getattr(self.router, "route_request", None)
-        self._route_request = rr if callable(rr) else None
-        up = getattr(self.router, "update_plan", None)
-        self._router_update_plan = up if callable(up) else None
+        # (hash-based ω splitting) and a plan feed — both declared
+        # capabilities, so the threshold-router hot path stays untouched
+        self._route_request = capability(self.router, "route_request")
+        self._router_update_plan = capability(self.router, "update_plan")
         # reused per-arrival routing inputs: lazy utils views per
         # (model, pool) and one preference list per home region
         self._lazy_utils = {k: _RegionUtils(v, self.regions)
@@ -199,19 +198,19 @@ class Simulation:
                        for r in self.regions}
         # policies may advertise a cheap pre-check (cooldown) that
         # predicts on_request cannot act, skipping the view build
-        gate = getattr(cfg.policy, "wants_request_view", None)
-        self._request_view_gate = gate if callable(gate) else None
+        self._request_view_gate = capability(cfg.policy,
+                                             "wants_request_view")
         # signals are only synthesized for policies that override the
         # base no-op observe
         obs = getattr(type(cfg.policy), "observe", None)
         self._wants_signals = (
             obs is not None and obs is not ScalingPolicy.observe)
 
-        # planners may advertise the placement-state feed (duck-typed,
-        # like the router capabilities above)
+        # planners may advertise the placement-state feed (a declared
+        # capability, like the router ones above)
         ctl = cfg.controller
-        sps = getattr(ctl, "set_placement_state", None) if ctl else None
-        self._feed_placement_state = sps if callable(sps) else None
+        self._feed_placement_state = (
+            capability(ctl, "set_placement_state") if ctl else None)
 
         self.bus = HookBus()
         self.bus.subscribe(Arrival, self._on_arrival)

@@ -1,0 +1,16 @@
+"""R1 fixture: a registered router missing a protocol method.
+
+Never imported — parsed only by reprolint in tests/test_analysis.py
+(importing it would pollute the real registry).
+"""
+from repro.api.registry import register
+
+
+class HalfRouter:
+    def rout(self, region_utils, preference):  # typo: should be `route`
+        return preference[0]
+
+
+@register("router", "lint-fixture-broken")  # R1-VIOLATION
+def _make_half_router(ctx, **kwargs) -> HalfRouter:
+    return HalfRouter(**kwargs)

@@ -1,0 +1,16 @@
+"""R2 fixture: a lossy dict round-trip on a dataclass."""
+import dataclasses
+from typing import Dict, Mapping
+
+
+@dataclasses.dataclass
+class LossySpec:
+    alpha: float = 1.0
+    beta: float = 2.0
+
+    def to_dict(self) -> Dict:  # R2-VIOLATION-TODICT
+        return {"alpha": self.alpha}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "LossySpec":  # R2-VIOLATION-FROMDICT
+        return cls(alpha=d.get("alpha", 1.0))

@@ -1,0 +1,9 @@
+"""R3 fixture: typo'd duck-type probes that would silently no-op."""
+from repro.api.capabilities import capability
+
+
+def probe(router):
+    fn = capability(router, "home_threshhold")  # R3-VIOLATION-CAPABILITY
+    if hasattr(router, "xyzzy_no_such_attr_anywhere"):  # R3-VIOLATION-HASATTR
+        return fn
+    return None

@@ -1,0 +1,15 @@
+"""R4 fixture: wall clock, global RNG, and set iteration in plan code."""
+import random
+import time
+
+import numpy as np
+
+
+def stamp_plan(targets):
+    issued = time.time()  # R4-VIOLATION-WALLCLOCK
+    jitter = np.random.rand()  # R4-VIOLATION-NPRANDOM
+    tie = random.random()  # R4-VIOLATION-RANDOM
+    order = []
+    for key in {k for k in targets}:  # R4-VIOLATION-SETITER
+        order.append(key)
+    return issued, jitter, tie, order

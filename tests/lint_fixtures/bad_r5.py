@@ -1,0 +1,10 @@
+"""R5 fixture: defaultdict subscript read in a read accessor."""
+import collections
+
+
+class Backlog:
+    def __init__(self):
+        self.queues = collections.defaultdict(list)
+
+    def depth(self, model):
+        return len(self.queues[model])  # R5-VIOLATION

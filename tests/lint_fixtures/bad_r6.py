@@ -1,0 +1,23 @@
+"""R6 fixture: host syncs in loops, per-call jit, non-static grid."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def total(xs):
+    out = 0.0
+    for x in xs:
+        out += x.item()  # R6-VIOLATION-ITEM
+    return out
+
+
+def rebuild(f, xs):
+    g = jax.jit(f)  # R6-VIOLATION-JIT
+    return g(xs)
+
+
+@functools.partial(jax.jit)
+def run_kernel(x, n, kernel):
+    return pl.pallas_call(kernel, grid=(n,),  # R6-VIOLATION-GRID
+                          out_shape=x)(x)

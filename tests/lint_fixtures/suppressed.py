@@ -1,0 +1,8 @@
+"""Suppression fixture: one valid suppression, one missing its reason."""
+import time
+
+
+def measure():
+    t0 = time.time()  # reprolint: disable=R4 -- fixture: measurement-only timing
+    t1 = time.time()  # reprolint: disable=R4
+    return t0, t1
