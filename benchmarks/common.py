@@ -17,14 +17,58 @@ $98.32/h H100-cluster price.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, Optional, Sequence, Tuple
 
-from repro.api import PolicySpec, StackSpec, build_stack
-from repro.api.experiment import ExperimentSpec
-from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR
-from repro.sim.metrics import Report
-from repro.sim.perfmodel import PerfProfile
-from repro.sim.workload import PAPER_MODELS, REGIONS, WorkloadSpec, generate
+_JAX_CONFIGURED = False
+
+
+def configure_jax(cache_dir: Optional[str] = None) -> str:
+    """Dispatch hygiene for the JAX-backed engines (vector simulator,
+    batched forecaster), applied *before* first device use.
+
+    Pins the XLA host platform to one device (we vectorize with vmap,
+    not pmap — extra host devices just split the CPU) and turns on the
+    persistent compilation cache so a fresh benchmark process starts
+    from compiled kernels instead of re-tracing + re-compiling the
+    scan: BENCH_sim.json records the cold/warm split this buys.
+    Returns the cache directory in use.  Idempotent; a no-op for the
+    XLA flags if the backend is already initialized.
+    """
+    global _JAX_CONFIGURED
+    cache = cache_dir or os.environ.get(
+        "JAX_COMPILATION_CACHE_DIR",
+        os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), ".jax_cache"))
+    if _JAX_CONFIGURED:
+        return cache
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=1").strip()
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+    import jax
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache)
+        # cache everything: the scan kernel is cheap to serialize and
+        # the whole point is skipping its ~1.5 s XLA compile
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except AttributeError:       # older jax: flags still applied
+        pass
+    _JAX_CONFIGURED = True
+    return cache
+
+
+configure_jax()
+
+from repro.api import PolicySpec, StackSpec, build_stack          # noqa: E402
+from repro.api.experiment import ExperimentSpec                   # noqa: E402
+from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR           # noqa: E402
+from repro.sim.metrics import Report                              # noqa: E402
+from repro.sim.perfmodel import PerfProfile                       # noqa: E402
+from repro.sim.workload import (PAPER_MODELS, REGIONS,            # noqa: E402
+                                WorkloadSpec, generate)
 
 DOLLARS_PER_HOUR = DEFAULT_DOLLARS_PER_HOUR     # paper §7.2.1
 THETA_HEADROOM = 0.7         # ILP capacity derating (keeps tail latency)
@@ -104,13 +148,15 @@ def bench_experiment(name: str, spec: BenchSpec,
                      schedulers: Optional[Sequence[str]] = None,
                      workloads: Optional[Dict[str, WorkloadSpec]] = None,
                      profiles: Optional[Dict[str, str]] = None,
+                     engine: str = "event",
                      ) -> ExperimentSpec:
     """Lift a ``BenchSpec`` into a declarative sweep.
 
     Either a ``strategies`` axis, or — for the scheduler studies — a
     ``schedulers`` axis where every variant runs the same base strategy
     with a different admission order.  ``workloads`` overrides the
-    single default workload derived from ``spec``.
+    single default workload derived from ``spec``; ``engine`` selects
+    the event loop or the vectorized bucket engine (docs/PERF.md).
     """
     if schedulers is not None:
         strat_axis = {sched: stack_spec(spec, strategies[0], sched)
@@ -120,7 +166,7 @@ def bench_experiment(name: str, spec: BenchSpec,
     return ExperimentSpec(
         name=name, strategies=strat_axis,
         workloads=workloads or {"default": workload_spec(spec)},
-        profiles=profiles or {})
+        profiles=profiles or {}, engine=engine)
 
 
 def run_strategy(trace, spec: BenchSpec, strategy: str,

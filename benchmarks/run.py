@@ -16,17 +16,18 @@ import sys
 import time
 
 
-def smoke(jobs=None, out=None) -> int:
+def smoke(jobs=None, out=None, engine="event") -> int:
     """Tiny end-to-end sweep: every strategy through the experiment
     runner (one declarative spec, parallel variants, fresh request
     copies per run).  Completion and drop counts derive from the
-    returned Reports — the shared trace is never re-scanned."""
+    returned Reports — the shared trace is never re-scanned.
+    ``engine="vector"`` runs the same sweep on the bucketed engine."""
     from benchmarks.common import (BenchSpec, STRATEGIES, bench_experiment,
                                    csv_line)
     from repro.api.experiment import run_experiment
     spec = BenchSpec(days=0.1, scale=0.02, initial_instances=3,
                      spot_spare=8)
-    exp = bench_experiment("smoke", spec, STRATEGIES)
+    exp = bench_experiment("smoke", spec, STRATEGIES, engine=engine)
     results = run_experiment(exp, jobs=jobs, out=out)
     print("name,value,derived", flush=True)
     n = results.results[0].n_requests
@@ -39,7 +40,7 @@ def smoke(jobs=None, out=None) -> int:
         csv_line(f"smoke.completion.{strat}", round(frac, 4), "fraction")
         csv_line(f"smoke.instance_hours.{strat}",
                  round(hours[strat], 1),
-                 f"{res.wall_s:.1f}s wall")
+                 f"{res.wall_s:.1f}s wall, {res.engine}")
         if frac < 0.9:
             print(f"FAILED smoke: {strat} completed only {frac:.1%}",
                   file=sys.stderr)
@@ -57,6 +58,54 @@ def smoke(jobs=None, out=None) -> int:
     return 0
 
 
+def week(engine="vector", jobs=None, quick=False, out=None) -> int:
+    """A simulated week, 7 strategies × 4 stress scenarios × 3 seeds —
+    the sweep the vector engine exists for (docs/PERF.md).  One
+    declarative experiment per scenario: the scenario's outage windows
+    ride on the stacks, its popularity shifts on the workloads, and the
+    seed axis becomes three workload variants, so the vector runner can
+    batch every compatible (strategy, seed) replica into one vmapped
+    scan.  ``--engine event`` runs the identical sweep on the event
+    loop (hours, not minutes, at full scale)."""
+    import dataclasses
+    from benchmarks.common import BenchSpec, STRATEGIES, csv_line, stack_spec
+    from benchmarks.fig_placement import scenario_inputs
+    from repro.api.experiment import ExperimentSpec, run_experiment
+    scenarios = ("baseline", "outage", "popshift", "combined")
+    seeds = (0,) if quick else (0, 1, 2)
+    scale = 0.01 if quick else 0.05
+    days = 7.0
+    spec = BenchSpec(days=days, scale=scale)
+    print("name,value,derived", flush=True)
+    t_start = time.time()
+    for scen in scenarios:
+        workloads, scen_spec = {}, None
+        for seed in seeds:
+            wl, scen_spec = scenario_inputs(scen, days, scale, seed)
+            workloads[f"s{seed}"] = wl
+        strat_axis = {
+            s: dataclasses.replace(stack_spec(spec, s), scenario=scen_spec)
+            for s in STRATEGIES}
+        exp = ExperimentSpec(name=f"week-{scen}", strategies=strat_axis,
+                             workloads=workloads, engine=engine)
+        results = run_experiment(
+            exp, jobs=jobs, out=f"{out}.{scen}.json" if out else None)
+        for r in results.results:
+            csv_line(f"week.{scen}.{r.strategy}.{r.workload}.completion",
+                     round(r.completion, 4),
+                     f"{round(r.total_instance_hours, 1)} inst-h, "
+                     f"{r.wall_s:.1f}s wall, {r.engine}")
+            if r.completion < 0.9:
+                print(f"FAILED week: {scen}/{r.strategy}/{r.workload} "
+                      f"completed only {r.completion:.1%}",
+                      file=sys.stderr)
+                return 1
+    csv_line("week.total_wall_s", round(time.time() - t_start, 1),
+             f"{len(scenarios)}x{len(STRATEGIES)}x{len(seeds)} runs, "
+             f"engine={engine}")
+    return 0
+
+
 def _call_run(mod, quick: bool, jobs):
     """Pass --jobs through to benchmarks whose run() takes it (the
     experiment-ported ones); legacy signatures get quick only."""
@@ -70,6 +119,12 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny <60s strategy sweep for CI")
+    ap.add_argument("--engine", default="event",
+                    choices=("event", "vector"),
+                    help="simulation engine for --smoke/--week sweeps")
+    ap.add_argument("--week", action="store_true",
+                    help="7-strategy x 4-scenario x 3-seed simulated "
+                         "week (minutes on --engine vector)")
     ap.add_argument("--jobs", type=int, default=None, metavar="N",
                     help="worker processes for experiment sweeps "
                          "(default: CPU count)")
@@ -85,8 +140,11 @@ def main(argv=None) -> int:
                          "(benchmarks.perf_sim) and write its JSON here")
     args = ap.parse_args(argv)
     jobs = args.jobs if args.jobs else (os.cpu_count() or 1)
+    if args.week:
+        return week(engine=args.engine, jobs=jobs, quick=args.quick,
+                    out=args.out)
     if args.smoke:
-        rc = smoke(jobs=jobs, out=args.out)
+        rc = smoke(jobs=jobs, out=args.out, engine=args.engine)
         if rc == 0 and args.bench_out:
             from benchmarks import perf_sim
             perf_sim.bench(repeats=1, out=args.bench_out)

@@ -26,6 +26,9 @@ python -m benchmarks.run --smoke
 echo "== perf smoke (simulator hot path, events/sec) =="
 python -m benchmarks.perf_sim --smoke
 
+echo "== vector smoke (same strategies on the batched scan engine) =="
+python -m benchmarks.run --smoke --engine vector
+
 echo "== control probe (one hourly plan: batched forecast + ILP) =="
 python -m benchmarks.perf_sim --control
 

@@ -10,7 +10,12 @@ Three device-interop hazards in modules that import jax:
   the jitted function);
 - ``pallas_call`` under a jit-decorated function whose ``grid=`` refers
   to a function parameter not listed in ``static_argnames`` — the grid
-  must be static at trace time.
+  must be static at trace time;
+- under ``repro/sim/vector``: a ``jax.jit`` that does not donate its
+  buffers (no ``donate_argnums``/``donate_argnames``).  The vector
+  engine's contract is that segment N+1 consumes segment N's carry in
+  place; a non-donating jit silently doubles peak state memory and
+  copies the whole carry every segment.
 
 Measurement-only paths (``train/loop.py``, ``launch/``, benchmarks) are
 allowlisted: they intentionally sync and re-jit.
@@ -25,6 +30,12 @@ from repro.analysis.project import (ModuleInfo, ProjectModel, dotted_name,
                                     is_measurement_path)
 
 RULE_ID = "R6"
+
+#: modules whose jits must donate their carry (docs/PERF.md, the vector
+#: engine's in-place segment contract)
+_DONATION_MARKER = "repro/sim/vector/"
+
+_DONATE_KWARGS = ("donate_argnums", "donate_argnames")
 
 
 def _jax_aliases(mod: ModuleInfo) -> Set[str]:
@@ -145,6 +156,35 @@ def _pallas_grid_violations(mod: ModuleInfo,
     return out
 
 
+def _vector_donation_violations(mod: ModuleInfo,
+                                jax_names: Set[str]) -> List[Violation]:
+    """Every jit under the vector engine must donate (the scan carry is
+    consumed in place; a copying jit doubles state memory per segment)."""
+    out: List[Violation] = []
+    for sub in ast.walk(mod.tree):
+        if not (isinstance(sub, ast.Call)
+                and _is_jit_ref(sub.func, jax_names)):
+            continue
+        if not any(kw.arg in _DONATE_KWARGS for kw in sub.keywords):
+            out.append(Violation(
+                RULE_ID, mod.display, sub.lineno, sub.col_offset,
+                "jax.jit under repro/sim/vector without donate_argnums/"
+                "donate_argnames — the segment carry must be donated so "
+                "it is updated in place, not copied"))
+    # a bare `@jax.jit` decorator can't donate either
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in fn.decorator_list:
+            if _is_jit_ref(dec, jax_names):
+                out.append(Violation(
+                    RULE_ID, mod.display, dec.lineno, dec.col_offset,
+                    f"bare @jax.jit on {fn.name}() under repro/sim/vector "
+                    f"cannot donate its carry; call jax.jit(...) with "
+                    f"donate_argnums/donate_argnames instead"))
+    return out
+
+
 def check(model: ProjectModel) -> List[Violation]:
     out: List[Violation] = []
     for mod in model.scoped_modules():
@@ -156,4 +196,6 @@ def check(model: ProjectModel) -> List[Violation]:
         out.extend(_host_sync_violations(mod, jax_names))
         out.extend(_jit_in_function_violations(mod, jax_names))
         out.extend(_pallas_grid_violations(mod, jax_names))
+        if _DONATION_MARKER in mod.display.replace("\\", "/"):
+            out.extend(_vector_donation_violations(mod, jax_names))
     return out

@@ -146,6 +146,10 @@ class ExperimentSpec:
     seeds: Tuple[int, ...] = ()
     variants: Tuple[Variant, ...] = ()
     profiles: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # simulation engine: "event" (discrete-event loop) or "vector"
+    # (repro.sim.vector — replicas sharing a group key run batched
+    # under vmap; unsupported components fall back to the event loop)
+    engine: str = "event"
 
     def __post_init__(self):
         self.strategies = {
@@ -206,6 +210,10 @@ class ExperimentSpec:
             if not isinstance(s, int):
                 raise ValueError(
                     f"ExperimentSpec.seeds must be ints (got {s!r})")
+        if self.engine not in ("event", "vector"):
+            raise ValueError(
+                f"ExperimentSpec.engine must be 'event' or 'vector' "
+                f"(got {self.engine!r})")
         expanded = self.expand()
         seen = set()
         for v in expanded:
@@ -234,6 +242,7 @@ class ExperimentSpec:
             "seeds": list(self.seeds),
             "variants": [v.to_dict() for v in self.variants],
             "profiles": dict(self.profiles),
+            "engine": self.engine,
         }
 
     @classmethod
@@ -259,6 +268,7 @@ class RunResult:
     n_requests: int
     report: Dict
     extras: Dict = dataclasses.field(default_factory=dict)
+    engine: str = "event"     # which simulation engine produced this
 
     # ------------------------------------------------------------ accessors
     @property
@@ -497,6 +507,91 @@ def _run_variant(variant_dict: Dict, trace: Union[Trace, str],
         extras=extras)
 
 
+def _run_vector(variants, traces, profile_names,
+                include_util_trace, probes) -> List[RunResult]:
+    """Vector-engine sweep path: variants sharing a workload and a
+    vector group key (same models/regions/pools/profiles/tick) run as
+    ONE vmapped ``VectorBatch``; components without a vector lowering
+    fall back to the event loop per variant.  Always in-process (JAX
+    owns the host), so ``jobs`` does not apply."""
+    from repro.api.stack import build_stack
+    from repro.sim.metrics import report_to_dict
+    from repro.sim.vector import VectorBatch, VectorUnsupported
+    from repro.sim.vector.params import extract, group_key
+
+    prof = _resolve_profiles(profile_names)
+    out: List[Optional[RunResult]] = [None] * len(variants)
+    by_wl: Dict[str, List[int]] = {}
+    for i, v in enumerate(variants):
+        by_wl.setdefault(_workload_key(v.workload), []).append(i)
+
+    def _result(i, report, wall, n, engine):
+        v = variants[i]
+        extras = {}
+        if probes:
+            reqs = traces[_workload_key(v.workload)].to_requests()
+            extras = {name: fn(reqs, report)
+                      for name, fn in probes.items()}
+        return RunResult(
+            variant=v.name, strategy=v.strategy,
+            workload=v.workload_name, seed=v.workload.seed,
+            spec_hash=spec_hash(v.to_dict()), wall_s=wall,
+            n_requests=n, engine=engine,
+            report=report_to_dict(report,
+                                  include_util_trace=include_util_trace),
+            extras=extras)
+
+    for wkey, idxs in by_wl.items():
+        trace = traces[wkey]
+        groups: Dict[Tuple, List[Tuple[int, object]]] = {}
+        fallback: List[int] = []
+        stacks = {}
+        for i in idxs:
+            v = variants[i]
+            stack = build_stack(v.stack, profiles=prof)
+            stacks[i] = stack
+            cfg = stack.sim_config()
+            models = list(stack.spec.models)
+            regions = list(stack.spec.regions)
+            try:
+                rp = extract(cfg, models, regions, stack.profiles,
+                             v.name)
+                if cfg.siloed and rp.mode != 0:
+                    raise VectorUnsupported("siloed non-reactive")
+                gk = group_key(rp, tuple(models), tuple(regions),
+                               stack.profiles)
+            except VectorUnsupported:
+                fallback.append(i)
+                continue
+            groups.setdefault(gk, []).append((i, cfg))
+        for members in groups.values():
+            i0 = members[0][0]
+            st0 = stacks[i0]
+            t0 = time.perf_counter()
+            try:
+                batch = VectorBatch(
+                    trace, [c for _, c in members],
+                    names=[variants[i].name for i, _ in members],
+                    models=list(st0.spec.models),
+                    regions=list(st0.spec.regions),
+                    profiles=st0.profiles)
+                reports = batch.run()
+            except VectorUnsupported:
+                fallback.extend(i for i, _ in members)
+                continue
+            wall = (time.perf_counter() - t0) / len(members)
+            for (i, _), rep in zip(members, reports):
+                out[i] = _result(i, rep, wall, len(trace), "vector")
+        for i in fallback:
+            v = variants[i]
+            reqs = trace.to_requests()
+            t0 = time.perf_counter()
+            rep = stacks[i].simulate(reqs, name=v.name)
+            out[i] = _result(i, rep, time.perf_counter() - t0,
+                             len(reqs), "event")
+    return out
+
+
 def run_experiment(spec: ExperimentSpec, jobs: Optional[int] = None,
                    out: Optional[str] = None,
                    probes: Optional[Dict[str, Probe]] = None,
@@ -531,7 +626,10 @@ def run_experiment(spec: ExperimentSpec, jobs: Optional[int] = None,
         jobs = os.cpu_count() or 1
     jobs = max(1, min(int(jobs), len(variants)))
 
-    if jobs == 1:
+    if spec.engine == "vector":
+        results = _run_vector(variants, traces, spec.profiles or None,
+                              include_util_trace, probes)
+    elif jobs == 1:
         results = [_run_variant(v.to_dict(), traces[_workload_key(
             v.workload)], spec.profiles or None, include_util_trace,
             probes) for v in variants]

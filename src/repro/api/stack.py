@@ -103,6 +103,19 @@ class ServingStack:
                          profiles=self.profiles, name=name)
         return sim.run()
 
+    def simulate_vector(self, trace, name: str = "sim") -> Report:
+        """Run the same stack on the vectorized bucket engine
+        (``repro.sim.vector``, docs/PERF.md).  ``trace`` may be a
+        columnar ``Trace`` (preferred — no Request materialization) or
+        a Request sequence.  Raises ``VectorUnsupported`` when a
+        component has no vector lowering."""
+        from repro.sim.vector import VectorSimulation
+        sim = VectorSimulation(trace, self.sim_config(),
+                               models=list(self.spec.models),
+                               regions=list(self.spec.regions),
+                               profiles=self.profiles, name=name)
+        return sim.run()
+
 
 def build_stack(spec: StackSpec,
                 profiles: Optional[Dict[str, PerfProfile]] = None

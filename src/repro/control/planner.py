@@ -164,6 +164,13 @@ class SageServeController:
                 peaks[key] = float(series.max()) if len(series) else 0.0
             else:
                 peaks[key] = float(np.max(fc))
+            if not np.isfinite(peaks[key]):
+                # a diverged fit (warm-started params can blow up on
+                # sparse series) must not poison the ILP: fall back to
+                # the observed recent peak
+                series = np.asarray(series, float)
+                tail = series[-1440:] if len(series) else series
+                peaks[key] = float(tail.max()) if len(tail) else 0.0
             self.last_forecast[key] = peaks[key]
         return peaks
 

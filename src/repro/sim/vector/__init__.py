@@ -1,0 +1,18 @@
+"""Vectorized mega-scale simulation core (docs/PERF.md).
+
+A batched fast path that advances many (variant, seed) replicas in
+lockstep over the columnar ``Trace``: struct-of-arrays state per
+(replica, cell, region) stepped in fixed time buckets under
+``jax.vmap`` + ``lax.scan`` with donated carry buffers, pausing at
+control-plane boundaries (hourly forecast/ILP/placement, scenario
+outages) where the *same* Python planner objects the event loop drives
+produce a ``Plan`` that is applied back into array state.
+
+Use ``ExperimentSpec(engine="vector")`` or
+``ServingStack.simulate_vector`` — stacks built by ``build_stack`` run
+unmodified on either engine.
+"""
+from repro.sim.vector.engine import (VectorBatch, VectorSimulation,
+                                     VectorUnsupported)
+
+__all__ = ["VectorBatch", "VectorSimulation", "VectorUnsupported"]

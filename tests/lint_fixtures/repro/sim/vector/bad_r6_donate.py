@@ -1,0 +1,16 @@
+"""R6 donation fixture: jits under repro/sim/vector must donate their
+carry (this file's path puts it in scope for the donation check)."""
+import jax
+
+
+def _step(carry, x):
+    return carry, x
+
+
+RUN = jax.jit(_step, donate_argnums=(0,))   # ok: donates the carry
+NOPE = jax.jit(_step)  # R6-VIOLATION-DONATE
+
+
+@jax.jit  # R6-VIOLATION-DONATE-DECORATOR
+def segment(carry, xs):
+    return carry, xs

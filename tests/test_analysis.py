@@ -93,6 +93,19 @@ def test_r6_fires_on_jax_hazards(fixture_result):
         assert _marker_line("bad_r6.py", marker) in lines, marker
 
 
+def test_r6_fires_on_non_donated_vector_jit(fixture_result):
+    """Under repro/sim/vector every jit must donate its carry; the
+    fixture lives at that path inside lint_fixtures to be in scope."""
+    fname = "repro/sim/vector/bad_r6_donate.py"
+    hits = _hits(fixture_result, "R6", "bad_r6_donate.py")
+    lines = {h.line for h in hits}
+    for marker in ("R6-VIOLATION-DONATE", "R6-VIOLATION-DONATE-DECORATOR"):
+        assert _marker_line(fname, marker) in lines, marker
+    # the donating jit on the `ok:` line is not flagged
+    ok_line = _marker_line(fname, "ok: donates")
+    assert ok_line not in lines
+
+
 # --------------------------------------------------------- suppressions
 def test_suppression_with_reason_suppresses(fixture_result):
     line = _marker_line("suppressed.py", "measurement-only timing")
@@ -128,7 +141,7 @@ def test_json_cli_output():
     data = json.loads(proc.stdout)
     for rule in ("R1", "R2", "R3", "R4", "R5", "R6", "R0"):
         assert data["counts"].get(rule, 0) >= 1, rule
-    assert data["files_checked"] == len(list(FIXTURES.glob("*.py")))
+    assert data["files_checked"] == len(list(FIXTURES.rglob("*.py")))
 
 
 def test_clean_src_cli_exits_zero():
