@@ -146,6 +146,56 @@ def time_control(fit_steps: int = 150, history_days: float = 2.0) -> dict:
     }
 
 
+def time_control_sweep(days: float = 0.25, scale: float = 0.01) -> dict:
+    """Sweep-scale control probe: a short multi-strategy batched
+    vector sweep through the fleet-forecast + amortized-ILP boundary
+    path.  Reports the per-boundary control cost and the dedupe
+    counters — the CI-sized twin of the ``control_week`` section the
+    week benchmark records into BENCH_sim.json (docs/PERF.md)."""
+    from benchmarks.common import BenchSpec, stack_spec
+    from repro.api.stack import build_stack
+    from repro.control.amortize import clear_solve_cache
+    from repro.control.forecast import clear_fit_cache
+    from repro.sim.vector import VectorBatch
+    from repro.sim.workload import WorkloadSpec, generate_trace
+
+    clear_fit_cache()
+    clear_solve_cache()
+    strats = ["lt-u", "lt-ua", "lt-ua+plan"]
+    spec = BenchSpec(days=days, scale=scale, initial_instances=3,
+                     spot_spare=8)
+    tr = generate_trace(WorkloadSpec(days=days, scale=scale, seed=0))
+    stacks = [build_stack(stack_spec(spec, s)) for s in strats]
+    vb = VectorBatch(tr, [st.sim_config() for st in stacks], strats,
+                     models=list(stacks[0].spec.models),
+                     regions=list(stacks[0].spec.regions),
+                     profiles=stacks[0].profiles, batched=True)
+    t0 = time.perf_counter()
+    vb.run()
+    wall = time.perf_counter() - t0
+    cs = dict(vb.control_stats)
+    control_s = (cs["forecast_s"] + cs["ilp_s"] + cs["transfer_s"]
+                 + cs["apply_s"])
+    boundaries = max(cs["boundaries"], 1)
+    solves = cs["ilp_cache_hits"] + cs["ilp_cache_misses"]
+    return {
+        "replicas": len(strats),
+        "wall_s": round(wall, 3),
+        "boundaries": cs["boundaries"],
+        "plans": cs["plans"],
+        "control_s_total": round(control_s, 3),
+        "boundary_s_mean": round(control_s / boundaries, 5),
+        "forecast_s": round(cs["forecast_s"], 3),
+        "ilp_s": round(cs["ilp_s"], 3),
+        "fleet_batches": cs.get("fleet_batches", 0),
+        "fleet_fits": cs.get("fleet_fits", 0),
+        "fleet_dedup_hits": (cs.get("fleet_dedup_hits", 0)
+                             + cs.get("fleet_cache_hits", 0)),
+        "ilp_cache_hit_rate": round(
+            cs["ilp_cache_hits"] / solves, 3) if solves else 0.0,
+    }
+
+
 def time_simulation(reqs, stack_spec, name: str, repeats: int = 3) -> dict:
     """Simulation wall-clock + events/sec on a built stack; records the
     best *and* the mean over repeats (the mean is what a sweep pays,
@@ -364,6 +414,23 @@ def control_probe(fit_steps: int = 100) -> int:
     if ctl["ilp_routing_s"] > 30.0:
         print("FAILED control probe: routing ILP implausibly slow",
               file=sys.stderr)
+        return 1
+    sweep = time_control_sweep()
+    for k in ("boundary_s_mean", "control_s_total", "forecast_s",
+              "ilp_s", "fleet_batches", "fleet_dedup_hits",
+              "ilp_cache_hit_rate"):
+        csv_line(f"control.sweep.{k}", sweep[k])
+    if sweep["boundaries"] < 1 or sweep["plans"] < sweep["boundaries"]:
+        print("FAILED control probe: batched sweep recorded no hourly "
+              "boundaries", file=sys.stderr)
+        return 1
+    if sweep["fleet_batches"] > sweep["boundaries"]:
+        print("FAILED control probe: fleet forecast dispatched more "
+              "than one vmap batch per boundary", file=sys.stderr)
+        return 1
+    if sweep["fleet_dedup_hits"] + sweep["ilp_cache_hit_rate"] == 0:
+        print("FAILED control probe: replicas sharing a trace never "
+              "hit the fit/solve caches", file=sys.stderr)
         return 1
     print("# control probe ok", flush=True)
     return 0

@@ -58,7 +58,8 @@ def smoke(jobs=None, out=None, engine="event") -> int:
     return 0
 
 
-def week(engine="vector", jobs=None, quick=False, out=None) -> int:
+def week(engine="vector", jobs=None, quick=False, out=None,
+         bench_out=None, bench_check=None) -> int:
     """A simulated week, 7 strategies × 4 stress scenarios × 3 seeds —
     the sweep the vector engine exists for (docs/PERF.md).  One
     declarative experiment per scenario: the scenario's outage windows
@@ -66,8 +67,16 @@ def week(engine="vector", jobs=None, quick=False, out=None) -> int:
     seed axis becomes three workload variants, so the vector runner can
     batch every compatible (strategy, seed) replica into one vmapped
     scan.  ``--engine event`` runs the identical sweep on the event
-    loop (hours, not minutes, at full scale)."""
+    loop (hours, not minutes, at full scale).
+
+    Batched runs carry per-boundary control-plane timings
+    (``forecast_s`` / ``ilp_s`` / ``transfer_s`` / ``apply_s``, see
+    docs/PERF.md "control plane at sweep scale"); they are aggregated
+    into a ``control_week`` section, written into ``bench_out`` (a
+    BENCH_sim.json) when given, and gated against a committed
+    ``bench_check`` file (>2× ``boundary_s_mean`` regression fails)."""
     import dataclasses
+    import json
     from benchmarks.common import BenchSpec, STRATEGIES, csv_line, stack_spec
     from benchmarks.fig_placement import scenario_inputs
     from repro.api.experiment import ExperimentSpec, run_experiment
@@ -78,6 +87,10 @@ def week(engine="vector", jobs=None, quick=False, out=None) -> int:
     spec = BenchSpec(days=days, scale=scale)
     print("name,value,derived", flush=True)
     t_start = time.time()
+    agg = {"batches": 0, "boundaries": 0, "plans": 0, "forecast_s": 0.0,
+           "ilp_s": 0.0, "transfer_s": 0.0, "apply_s": 0.0}
+    counters = {}
+    seen_batches = set()
     for scen in scenarios:
         workloads, scen_spec = {}, None
         for seed in seeds:
@@ -100,9 +113,65 @@ def week(engine="vector", jobs=None, quick=False, out=None) -> int:
                       f"completed only {r.completion:.1%}",
                       file=sys.stderr)
                 return 1
-    csv_line("week.total_wall_s", round(time.time() - t_start, 1),
+            ctl = (r.extras or {}).get("control")
+            bid = (scen, ctl.get("batch")) if ctl else None
+            if ctl and bid not in seen_batches:  # one entry per batch
+                seen_batches.add(bid)
+                agg["batches"] += 1
+                for k in ("boundaries", "plans"):
+                    agg[k] += int(ctl.get(k, 0))
+                for k in ("forecast_s", "ilp_s", "transfer_s", "apply_s"):
+                    agg[k] += float(ctl.get(k, 0.0))
+                for k, v in ctl.items():
+                    if k.startswith(("fleet_", "ilp_cache_")):
+                        counters[k] = counters.get(k, 0) + v
+    wall = time.time() - t_start
+    csv_line("week.total_wall_s", round(wall, 1),
              f"{len(scenarios)}x{len(STRATEGIES)}x{len(seeds)} runs, "
              f"engine={engine}")
+    control_week = None
+    if agg["boundaries"]:
+        control_s = (agg["forecast_s"] + agg["ilp_s"]
+                     + agg["transfer_s"] + agg["apply_s"])
+        control_week = {
+            **{k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in agg.items()},
+            **counters,
+            "control_s_total": round(control_s, 3),
+            "boundary_s_mean": round(control_s / agg["boundaries"], 5),
+            "wall_s": round(wall, 1), "engine": engine,
+            "quick": bool(quick), "seeds": len(seeds)}
+        csv_line("week.control.boundary_s_mean",
+                 control_week["boundary_s_mean"],
+                 f"{agg['boundaries']} boundaries, "
+                 f"{agg['plans']} plans, {agg['batches']} batches")
+        csv_line("week.control.total_s", control_week["control_s_total"],
+                 f"forecast {agg['forecast_s']:.1f}s + ilp "
+                 f"{agg['ilp_s']:.1f}s + transfer "
+                 f"{agg['transfer_s']:.1f}s + apply {agg['apply_s']:.1f}s")
+    if bench_out and control_week:
+        data = {}
+        if os.path.exists(bench_out):
+            with open(bench_out) as f:
+                data = json.load(f)
+        data["control_week"] = control_week
+        with open(bench_out, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# control_week written to {bench_out}", flush=True)
+    if bench_check and control_week:
+        with open(bench_check) as f:
+            committed = json.load(f).get("control_week", {})
+        ref = committed.get("boundary_s_mean")
+        if ref and control_week["boundary_s_mean"] > 2.0 * ref:
+            print(f"FAILED week: control boundary_s_mean "
+                  f"{control_week['boundary_s_mean']}s is >2x the "
+                  f"committed {ref}s ({bench_check})", file=sys.stderr)
+            return 1
+        if ref:
+            print(f"# control probe ok: boundary_s_mean "
+                  f"{control_week['boundary_s_mean']}s vs committed "
+                  f"{ref}s (gate 2x)", flush=True)
     return 0
 
 
@@ -137,12 +206,18 @@ def main(argv=None) -> int:
                          "scenario (outage | popshift | combined)")
     ap.add_argument("--bench-out", default=None, metavar="BENCH_sim.json",
                     help="also run the simulator perf benchmark "
-                         "(benchmarks.perf_sim) and write its JSON here")
+                         "(benchmarks.perf_sim) and write its JSON here; "
+                         "with --week, write the control_week section")
+    ap.add_argument("--bench-check", default=None, metavar="BENCH_sim.json",
+                    help="with --week: fail if control_week."
+                         "boundary_s_mean regresses >2x vs this "
+                         "committed file")
     args = ap.parse_args(argv)
     jobs = args.jobs if args.jobs else (os.cpu_count() or 1)
     if args.week:
         return week(engine=args.engine, jobs=jobs, quick=args.quick,
-                    out=args.out)
+                    out=args.out, bench_out=args.bench_out,
+                    bench_check=args.bench_check)
     if args.smoke:
         rc = smoke(jobs=jobs, out=args.out, engine=args.engine)
         if rc == 0 and args.bench_out:

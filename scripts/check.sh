@@ -29,8 +29,15 @@ python -m benchmarks.perf_sim --smoke
 echo "== vector smoke (same strategies on the batched scan engine) =="
 python -m benchmarks.run --smoke --engine vector
 
-echo "== control probe (one hourly plan: batched forecast + ILP) =="
+echo "== control probe (one hourly plan: batched forecast + ILP, plus"
+echo "   a sweep-scale probe of the fleet-batched boundary path) =="
 python -m benchmarks.perf_sim --control
+
+echo "== control regression gate (quick week on the batched engine;"
+echo "   fails if control_week.boundary_s_mean regressed >2x vs the"
+echo "   committed BENCH_sim.json) =="
+python -m benchmarks.run --week --quick --engine vector \
+  --bench-check BENCH_sim.json
 
 echo "== placement smoke (tiny outage + popularity-shift scenario) =="
 python -m benchmarks.fig_placement --smoke

@@ -35,6 +35,8 @@ CAPABILITIES: Dict[str, int] = {
     "initial_instances": 0,   # () -> int: per-key warm-start count
     # planner extensions
     "set_placement_state": 1,  # (state): observe actuated placement
+    "forecast_spec": 0,       # () -> tuple | None: fleet-batchable fit cfg
+    "plan_fitted": 5,         # (now, instances, history, niw, fitted) -> Plan
 }
 
 _validated: Dict[Tuple[type, str], Optional[str]] = {}

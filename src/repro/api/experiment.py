@@ -580,8 +580,17 @@ def _run_vector(variants, traces, profile_names,
                 fallback.extend(i for i, _ in members)
                 continue
             wall = (time.perf_counter() - t0) / len(members)
+            # batch-level control-plane stats (hourly boundaries are
+            # shared work): attached to every member with the batch id,
+            # so aggregators can dedupe by it
+            ctl = dict(getattr(batch, "control_stats", None) or {})
+            if ctl:
+                ctl["batch"] = variants[i0].name
+                ctl["replicas"] = len(members)
             for (i, _), rep in zip(members, reports):
                 out[i] = _result(i, rep, wall, len(trace), "vector")
+                if ctl:
+                    out[i].extras["control"] = dict(ctl)
         for i in fallback:
             v = variants[i]
             reqs = trace.to_requests()

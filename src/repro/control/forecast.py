@@ -22,8 +22,11 @@ Two fitting paths share the same math:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import hashlib
+import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -31,6 +34,37 @@ import jax.numpy as jnp
 import numpy as np
 
 Key = Tuple[str, str]
+
+# Process-wide content-addressed fit cache: signature of (trimmed series,
+# init params, fit config) -> fitted param pytree.  Fits are pure
+# functions of that signature (see ``fit_forecast``'s batch-purity
+# contract), so replaying a boundary whose histories were already fitted
+# — e.g. the same trace swept under a different stress scenario — skips
+# the Adam scan entirely and returns the identical parameters.
+_FIT_CACHE_MAX = 4096
+_FIT_CACHE: "collections.OrderedDict[bytes, dict]" = collections.OrderedDict()
+_FIT_CACHE_LOCK = threading.Lock()
+
+
+def clear_fit_cache() -> None:
+    """Drop the process-wide fit cache (tests / memory pressure)."""
+    with _FIT_CACHE_LOCK:
+        _FIT_CACHE.clear()
+
+
+def _fit_cache_get(sig: bytes) -> Optional[dict]:
+    with _FIT_CACHE_LOCK:
+        prm = _FIT_CACHE.get(sig)
+        if prm is not None:
+            _FIT_CACHE.move_to_end(sig)
+        return prm
+
+
+def _fit_cache_put(sig: bytes, prm: dict) -> None:
+    with _FIT_CACHE_LOCK:
+        _FIT_CACHE[sig] = prm
+        while len(_FIT_CACHE) > _FIT_CACHE_MAX:
+            _FIT_CACHE.popitem(last=False)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "q"))
@@ -248,6 +282,9 @@ class BatchForecastEngine:
         self._warm: Dict[Key, dict] = {}     # key -> np param pytree
         self.fits = 0                        # series fitted (lifetime)
         self.batches = 0                     # batched dispatches (lifetime)
+        self.unique_fits = 0                 # rows actually run through Adam
+        self.dedup_hits = 0                  # rows served by an identical row
+        self.cache_hits = 0                  # rows served by the process cache
 
     def min_history(self) -> int:
         return max(8, self.p + self.q + 2)
@@ -266,11 +303,42 @@ class BatchForecastEngine:
             return (n // self.length_quantum) * self.length_quantum
         return n
 
+    def _row_sig(self, y: np.ndarray, init: dict, s_eff: int) -> bytes:
+        """Content signature of one fit: trimmed series + init params +
+        everything else ``_fit_arma_core`` (and the forecast recursion)
+        reads.  Two rows with equal signatures produce bit-identical
+        fitted parameters and forecasts — see the batch-purity contract
+        in ``fit_forecast``."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.ascontiguousarray(y, np.float32).tobytes())
+        for leaf in jax.tree.leaves(init):
+            h.update(np.ascontiguousarray(leaf, np.float32).tobytes())
+        h.update(repr((self.p, self.d, self.q, s_eff,
+                       self.fit_steps)).encode())
+        return h.digest()
+
     # ------------------------------------------------------------------ fit
     def fit_forecast(self, history: Dict[Key, np.ndarray], horizon: int
                      ) -> Dict[Key, np.ndarray]:
         """Fit every series long enough and forecast ``horizon`` steps.
-        Returns {key: forecast array}; too-short keys are absent."""
+        Returns {key: forecast array}; too-short keys are absent.
+
+        Batch-purity contract: the fitted parameters of a row are a
+        pure function of (trimmed series, init params, fit config) —
+        independent of which other rows share the vmap batch and of the
+        row order.  XLA's CPU lowering is bitwise row-independent for
+        batches of two or more rows (a batch of one lowers differently),
+        so single-row fits are padded with a duplicate row.  That purity
+        is what makes the two amortizations below *exact*:
+
+        - rows with identical signatures inside one call are fitted
+          once and fanned out (``dedup_hits``) — this is how a fleet of
+          replicas sweeping the same trace pays for one fit per
+          boundary, not one per replica;
+        - rows already fitted anywhere in this process are served from
+          the content-addressed ``_FIT_CACHE`` (``cache_hits``), e.g.
+          the same workload swept under a different stress scenario.
+        """
         by_len: Dict[int, list] = {}
         series: Dict[Key, np.ndarray] = {}
         # sorted: batch composition (and thus emitted plans) must not
@@ -284,28 +352,66 @@ class BatchForecastEngine:
             by_len.setdefault(len(y), []).append(key)
 
         out: Dict[Key, np.ndarray] = {}
+        cold = jax.tree.map(np.asarray, zero_params(self.p, self.q))
         for n, keys in sorted(by_len.items()):
             s_eff = self._seasonal_for(n)
-            zs, scales = [], []
-            for key in keys:
+            inits = [self._warm.get(k, cold) if self.warm_start else cold
+                     for k in keys]
+            sigs = [self._row_sig(series[k], ini, s_eff)
+                    for k, ini in zip(keys, inits)]
+            # one fit per unique signature; cached signatures skip even
+            # that (first occurrence wins, preserving sorted-key order)
+            params_by_sig: Dict[bytes, dict] = {}
+            fit_rows: list = []        # (sig, z_row, init) to actually fit
+            fit_seen: set = set()
+            for key, sig, ini in zip(keys, sigs, inits):
+                if sig in fit_seen or sig in params_by_sig:
+                    self.dedup_hits += 1
+                    continue
+                prm = _fit_cache_get(sig)
+                if prm is not None:
+                    params_by_sig[sig] = prm
+                    self.cache_hits += 1
+                    continue
                 z = _difference(series[key], self.d, s_eff)
                 sc = float(np.std(z) + 1e-6)
-                zs.append(z / sc)
-                scales.append(sc)
-            ybatch = jnp.asarray(np.stack(zs).astype(np.float32))
-            init = self._stack_warm(keys)
-            params, _ = _fit_arma_batch(ybatch, init, self.p, self.q,
-                                        steps=self.fit_steps)
-            params = jax.tree.map(np.asarray, params)
-            self.batches += 1
-            for i, key in enumerate(keys):
-                prm = jax.tree.map(lambda a, i=i: a[i], params)
+                fit_rows.append((sig, z / sc, ini))
+                fit_seen.add(sig)
+            if fit_rows:
+                zs = [z for _, z, _ in fit_rows]
+                init_rows = [ini for _, _, ini in fit_rows]
+                if len(zs) == 1:   # duplicate the row: see contract
+                    zs = zs * 2
+                    init_rows = init_rows * 2
+                ybatch = jnp.asarray(np.stack(zs).astype(np.float32))
+                init = jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(xs)), *init_rows)
+                params, _ = _fit_arma_batch(ybatch, init, self.p, self.q,
+                                            steps=self.fit_steps)
+                params = jax.tree.map(np.asarray, params)
+                self.batches += 1
+                for i, (sig, _, _) in enumerate(fit_rows):
+                    prm = jax.tree.map(lambda a, i=i: a[i], params)
+                    params_by_sig[sig] = prm
+                    _fit_cache_put(sig, prm)
+                    self.unique_fits += 1
+            # fan out: forecasts computed once per signature, shared by
+            # every key whose (series, init) matched
+            fc_by_sig: Dict[bytes, np.ndarray] = {}
+            for key, sig in zip(keys, sigs):
+                prm = params_by_sig[sig]
                 if self.warm_start:
                     self._warm[key] = prm
                 self.fits += 1
-                out[key] = _arma_forecast(prm, series[key], self.p,
-                                          self.d, self.q, s_eff,
-                                          scales[i], horizon)
+                fc = fc_by_sig.get(sig)
+                if fc is None:
+                    sc = float(np.std(_difference(series[key], self.d,
+                                                  s_eff)) + 1e-6)
+                    fc = _arma_forecast(prm, series[key], self.p,
+                                        self.d, self.q, s_eff,
+                                        sc, horizon)
+                    fc_by_sig[sig] = fc
+                out[key] = fc
         return out
 
     def fit_forecast_serial(self, history: Dict[Key, np.ndarray],

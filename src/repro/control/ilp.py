@@ -64,6 +64,27 @@ def _solve_milp(c, A_ub, b_ub, A_eq, b_eq, bounds, integrality,
     return ILPResult(x, obj, status, 1, gap)
 
 
+def _warm_feasible(x, c, A_ub, b_ub, A_eq, b_eq, bounds, integrality,
+                   tol: float) -> bool:
+    """Is a warm-start point feasible (bounds, integrality, rows)?"""
+    if not np.all(np.isfinite(x)) or x.shape != c.shape:
+        return False
+    if np.any(np.abs(x - np.round(x))[integrality] > tol):
+        return False
+    for v, (lo, hi) in enumerate(bounds):
+        if lo is not None and x[v] < lo - tol:
+            return False
+        if hi is not None and x[v] > hi + tol:
+            return False
+    if A_ub is not None and np.any(
+            _as_matrix(A_ub) @ x > np.asarray(b_ub, float) + tol):
+        return False
+    if A_eq is not None and np.any(
+            np.abs(_as_matrix(A_eq) @ x - np.asarray(b_eq, float)) > tol):
+        return False
+    return True
+
+
 @dataclasses.dataclass
 class ILPResult:
     x: np.ndarray
@@ -77,12 +98,19 @@ def solve_ilp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, bounds=None,
               integrality: Optional[np.ndarray] = None,
               max_nodes: int = 2000, tol: float = 1e-6,
               backend: str = "milp", time_limit: float = 60.0,
-              mip_rel_gap: float = 1e-3) -> ILPResult:
+              mip_rel_gap: float = 1e-3,
+              x0: Optional[np.ndarray] = None) -> ILPResult:
     """Minimize c @ x subject to A_ub x <= b_ub, A_eq x = b_eq, bounds.
 
     integrality: bool mask per var (default: all integer).
     backend: "milp" (HiGHS MIP) or "bnb" (own branch-and-bound over
     linprog relaxations; cross-checked against milp in the tests).
+    x0: optional warm-start point (e.g. the previous hour's solution).
+    The "bnb" backend seeds it as the initial incumbent after a
+    feasibility check, pruning every node whose relaxation cannot beat
+    it — the objective value returned is unchanged, but among multiple
+    optima the warm incumbent may be the one kept.  The "milp" backend
+    ignores it (scipy's HiGHS wrapper exposes no warm-start API).
     """
     c = np.asarray(c, float)
     n = c.shape[0]
@@ -112,7 +140,20 @@ def solve_ilp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, bounds=None,
     if root.status != 0:
         return ILPResult(np.zeros(n), math.inf, "infeasible", 1, math.inf)
 
+    # early exit: the root relaxation already integral is the optimum —
+    # no need to run it through the node machinery
+    i0, _ = frac_var(root.x)
+    if i0 is None:
+        x = np.round(np.where(integrality, np.round(root.x), root.x), 9)
+        return ILPResult(x, float(root.fun), "optimal", 1, 0.0)
+
     best_x, best_obj = None, math.inf
+    if x0 is not None:
+        xw = np.asarray(x0, float)
+        if _warm_feasible(xw, c, A_ub, b_ub, A_eq, b_eq, bounds,
+                          integrality, tol):
+            best_x = np.round(np.where(integrality, np.round(xw), xw), 9)
+            best_obj = float(c @ best_x)
     counter = itertools.count()
     heap = [(root.fun, next(counter), bounds, root)]
     nodes = 0

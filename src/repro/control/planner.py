@@ -35,6 +35,7 @@ import numpy as np
 from repro.api.plan import (PlacementAction, PlacementPlan, PlacementState,
                             Plan, RoutingPlan)
 from repro.api.registry import register
+from repro.control.amortize import solve_amortized
 from repro.control.cost import DEFAULT_DOLLARS_PER_HOUR
 from repro.control.forecast import ARIMAForecaster, BatchForecastEngine
 from repro.control.provision import (ProvisionProblem, ProvisionSolution,
@@ -86,6 +87,11 @@ class ControllerConfig:
     outages: Tuple[Tuple[str, float, float], ...] = ()
     # per-region instance caps (overrides the scalar region_cap)
     region_caps: Optional[Dict[str, float]] = None
+    # dedupe identical hourly ILPs across replicas/hours through the
+    # process-wide fingerprint cache (repro.control.amortize).  The
+    # solver is deterministic, so a cache hit is bit-identical to
+    # re-solving; disable only to benchmark the cold path.
+    amortize_ilp: bool = True
 
 
 class SageServeController:
@@ -149,12 +155,28 @@ class SageServeController:
         return None
 
     # ------------------------------------------------------------- forecast
-    def forecast_peaks(self, history: Dict[Key, np.ndarray]
+    def forecast_spec(self) -> Optional[Tuple]:
+        """Duck-typed capability: the fit configuration under which this
+        controller's forecasts can be batched *fleet-wide* — replicas
+        whose specs compare equal may have their histories stacked into
+        one shared ``fit_forecast`` call (see
+        :class:`repro.control.fleet.FleetForecast`).  ``None`` opts out
+        (serial engines keep their per-replica path)."""
+        cfg = self.cfg
+        if not cfg.batched:
+            return None
+        p, d, q = cfg.arima_order
+        return (p, d, q, cfg.seasonal_period, cfg.fit_steps,
+                cfg.horizon_windows)
+
+    def forecast_peaks(self, history: Dict[Key, np.ndarray],
+                       fitted: Optional[Dict[Key, np.ndarray]] = None
                        ) -> Dict[Key, float]:
         peaks: Dict[Key, float] = {}
-        fit = (self.engine.fit_forecast if self.cfg.batched
-               else self.engine.fit_forecast_serial)
-        fitted = fit(history, self.cfg.horizon_windows)
+        if fitted is None:
+            fit = (self.engine.fit_forecast if self.cfg.batched
+                   else self.engine.fit_forecast_serial)
+            fitted = fit(history, self.cfg.horizon_windows)
         # sorted: peak emission order must not depend on caller dict order
         for key, series in sorted(history.items()):
             fc = fitted.get(key)
@@ -164,27 +186,44 @@ class SageServeController:
                 peaks[key] = float(series.max()) if len(series) else 0.0
             else:
                 peaks[key] = float(np.max(fc))
-            if not np.isfinite(peaks[key]):
+            series = np.asarray(series, float)
+            tail = series[-1440:] if len(series) else series
+            obs = float(tail.max()) if len(tail) else 0.0
+            if not np.isfinite(peaks[key]) or peaks[key] > 16.0 * obs + 1.0:
                 # a diverged fit (warm-started params can blow up on
-                # sparse series) must not poison the ILP: fall back to
-                # the observed recent peak
-                series = np.asarray(series, float)
-                tail = series[-1440:] if len(series) else series
-                peaks[key] = float(tail.max()) if len(tail) else 0.0
+                # sparse series) must not poison the ILP — and a blown-up
+                # fit is not always inf: an hourly peak orders of
+                # magnitude above anything observed in the last day is
+                # divergence, not forecast.  Fall back to the observed
+                # recent peak.
+                peaks[key] = obs
             self.last_forecast[key] = peaks[key]
         return peaks
 
     # ------------------------------------------------------------------ ILP
+    def plan_fitted(self, now: float,
+                    instances: Dict[Key, int],
+                    history: Dict[Key, np.ndarray],
+                    niw_last_hour_tps: Dict[Key, float],
+                    fitted: Dict[Key, np.ndarray]) -> Plan:
+        """Duck-typed capability: like :meth:`plan`, but consuming
+        forecasts already fitted by a fleet-wide batched engine (one
+        stacked fit per boundary across replicas) instead of running
+        this controller's own engine."""
+        return self.plan(now, instances, history, niw_last_hour_tps,
+                         fitted=fitted)
+
     def plan(self, now: float,
              instances: Dict[Key, int],
              history: Dict[Key, np.ndarray],
-             niw_last_hour_tps: Dict[Key, float]) -> Plan:
+             niw_last_hour_tps: Dict[Key, float],
+             fitted: Optional[Dict[Key, np.ndarray]] = None) -> Plan:
         """One hourly control decision: forecast, solve, emit the Plan."""
         cfg = self.cfg
         models, regions = list(cfg.models), list(cfg.regions)
         l, r = len(models), len(regions)
         t0 = time.perf_counter()
-        peaks = self.forecast_peaks(history)
+        peaks = self.forecast_peaks(history, fitted=fitted)
         t_forecast = time.perf_counter() - t0
 
         n = np.zeros((l, r, 1))
@@ -246,8 +285,7 @@ class SageServeController:
             pinned=pinned)
         t0 = time.perf_counter()
         if cfg.use_routing or cfg.use_placement:
-            sol = solve_with_routing(
-                prob, spill_cost_per_tps=cfg.spill_cost_per_tps)
+            sol = self._solve_routing(prob)
             if cfg.use_placement and sol.status == "infeasible":
                 # e.g. demand exists but no region is deployable for a
                 # model: degrade to the placement-blind program rather
@@ -255,8 +293,9 @@ class SageServeController:
                 prob = dataclasses.replace(prob, placed=None,
                                            place_cost=None,
                                            deployable=None, pinned=None)
-                sol = solve_with_routing(
-                    prob, spill_cost_per_tps=cfg.spill_cost_per_tps)
+                sol = self._solve_routing(prob)
+        elif cfg.amortize_ilp:
+            sol = solve_amortized(prob)
         else:
             sol = solve(prob)
         t_ilp = time.perf_counter() - t0
@@ -286,6 +325,15 @@ class SageServeController:
                     cost_estimate=float(sol.objective), status=sol.status)
         self.last_plan = plan
         return plan
+
+    def _solve_routing(self, prob: ProvisionProblem) -> ProvisionSolution:
+        cfg = self.cfg
+        if cfg.amortize_ilp:
+            return solve_amortized(
+                prob, use_routing=True,
+                spill_cost_per_tps=cfg.spill_cost_per_tps)
+        return solve_with_routing(
+            prob, spill_cost_per_tps=cfg.spill_cost_per_tps)
 
     def _placement_plan(self, y: np.ndarray, placed: np.ndarray,
                         leads: np.ndarray, models: Sequence[str],

@@ -56,10 +56,10 @@ floor would otherwise keep alive forever.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
-from scipy.sparse import coo_matrix
+from scipy.sparse import coo_matrix, csr_matrix
 
 from repro.control.ilp import ILPResult, solve_ilp
 
@@ -99,6 +99,11 @@ def _demand(problem: ProvisionProblem) -> np.ndarray:
     rho = np.asarray(problem.rho_peak, float)
     if problem.buffer is not None:
         rho = rho + np.asarray(problem.buffer, float)
+    if not np.isfinite(rho).all():
+        # a poisoned demand vector must fail loudly here: HiGHS
+        # segfaults (not raises) on non-finite problem data
+        raise ValueError("ProvisionProblem: non-finite demand "
+                         "(rho_peak/buffer)")
     return rho
 
 
@@ -117,6 +122,41 @@ def _delta_bounds(problem, n, rho, theta, l, r, g):
     return bounds
 
 
+# Cached constraint *structure* per static config: the hourly loop
+# re-solves the same program shape with fresh coefficients, so the
+# sparsity pattern (COO→CSR ordering), integrality mask and bounds
+# skeleton are hoisted out and each solve only fills ``c``/values/rhs
+# into the cached pattern.  The key captures everything the pattern
+# depends on — dimensions, which optional blocks exist, and (with
+# placement) the ρ>0 mask that decides which routing-gating rows are
+# emitted.  Bounded; see ``_structure_for``.
+_PATTERN_CACHE: Dict[Tuple, Dict[str, dict]] = {}
+_PATTERN_CACHE_MAX = 256
+
+
+def _structure_for(key: Tuple) -> Dict[str, dict]:
+    ent = _PATTERN_CACHE.get(key)
+    if ent is None:
+        if len(_PATTERN_CACHE) >= _PATTERN_CACHE_MAX:
+            _PATTERN_CACHE.clear()
+        ent = _PATTERN_CACHE[key] = {}
+    return ent
+
+
+def _static_key(problem: "ProvisionProblem", routing: bool,
+                rho: np.ndarray) -> Tuple:
+    l, r, g = np.asarray(problem.n).shape
+    key = (routing, l, r, g,
+           problem.placed is not None,
+           problem.region_cap is not None,
+           problem.max_instances is not None,
+           problem.gpus_per_instance is not None)
+    if routing and problem.placed is not None:
+        # routing-gating rows exist only for homes with demand
+        key += ((rho > 0.0).tobytes(),)
+    return key
+
+
 class _RowBuilder:
     def __init__(self):
         self.rows, self.cols, self.vals, self.rhs = [], [], [], []
@@ -129,17 +169,52 @@ class _RowBuilder:
         self.rhs.append(float(rhs))
         self.nrow += 1
 
-    def matrix(self, ncols):
-        return coo_matrix((self.vals, (self.rows, self.cols)),
-                          shape=(self.nrow, ncols)).tocsr()
+    def matrix(self, ncols, structure: Optional[dict] = None):
+        """CSR matrix of the emitted rows.  With a ``structure`` dict
+        the COO→CSR ordering is computed once and cached in it; later
+        calls with the same pattern fill coefficients straight into the
+        cached ``indices``/``indptr`` (no sort, no duplicate scan)."""
+        vals = np.asarray(self.vals, float)
+        if structure is None:
+            return coo_matrix((vals, (self.rows, self.cols)),
+                              shape=(self.nrow, ncols)).tocsr()
+        pat = structure.get("pat")
+        if pat is None:
+            coo = coo_matrix((np.arange(len(vals), dtype=float),
+                              (self.rows, self.cols)),
+                             shape=(self.nrow, ncols))
+            csr = coo.tocsr()
+            if len(csr.data) != len(vals):
+                # duplicate (row, col) entries would be summed by
+                # tocsr(): the permutation trick is invalid, fall back
+                structure["pat"] = False
+                return coo_matrix((vals, (self.rows, self.cols)),
+                                  shape=(self.nrow, ncols)).tocsr()
+            pat = structure["pat"] = {
+                "perm": csr.data.astype(np.int64),
+                "indices": csr.indices.copy(),
+                "indptr": csr.indptr.copy(),
+                "shape": (self.nrow, ncols)}
+        elif pat is False:
+            return coo_matrix((vals, (self.rows, self.cols)),
+                              shape=(self.nrow, ncols)).tocsr()
+        if pat["shape"] != (self.nrow, ncols) or \
+                len(pat["perm"]) != len(vals):
+            raise ValueError(
+                "provision structure cache: emitted rows do not match "
+                "the cached sparsity pattern (static key too coarse)")
+        return csr_matrix((vals[pat["perm"]], pat["indices"],
+                           pat["indptr"]), shape=pat["shape"])
 
 
-def solve(problem: ProvisionProblem, max_nodes: int = 2000
-          ) -> ProvisionSolution:
+def solve(problem: ProvisionProblem, max_nodes: int = 2000,
+          backend: str = "milp",
+          x0: Optional[np.ndarray] = None) -> ProvisionSolution:
     n = np.asarray(problem.n, float)
     l, r, g = n.shape
     theta = np.asarray(problem.theta, float)
     rho = _demand(problem)
+    struct = _structure_for(_static_key(problem, False, rho))
     nv = l * r * g
 
     def vid(i, j, k):  # delta var id
@@ -172,12 +247,16 @@ def solve(problem: ProvisionProblem, max_nodes: int = 2000
 
     _add_shared_rows(ub, problem, n, l, r, g, vid)
 
-    A_ub = ub.matrix(2 * nv)
+    A_ub = ub.matrix(2 * nv, structure=struct)
     bounds = _delta_bounds(problem, n, rho, theta, l, r, g)
-    integrality = np.concatenate([np.ones(nv, bool), np.zeros(nv, bool)])
+    integrality = struct.get("integrality")
+    if integrality is None:
+        integrality = struct["integrality"] = np.concatenate(
+            [np.ones(nv, bool), np.zeros(nv, bool)])
     res = solve_ilp(np.asarray(c), A_ub=A_ub,
                     b_ub=np.asarray(ub.rhs), bounds=bounds,
-                    integrality=integrality, max_nodes=max_nodes)
+                    integrality=integrality, max_nodes=max_nodes,
+                    backend=backend, x0=x0)
     delta = res.x[:nv].reshape(l, r, g)
     return ProvisionSolution(delta=delta, objective=res.objective,
                              status=res.status, nodes=res.nodes)
@@ -216,7 +295,9 @@ def _add_shared_rows(ub: _RowBuilder, problem, n, l, r, g, vid, yid=None):
 
 def solve_with_routing(problem: ProvisionProblem,
                        spill_cost_per_tps: float = 1e-3,
-                       max_nodes: int = 2000) -> ProvisionSolution:
+                       max_nodes: int = 2000, backend: str = "milp",
+                       x0: Optional[np.ndarray] = None
+                       ) -> ProvisionSolution:
     """Co-optimize instance deltas with cross-region routing fractions
     ω_{i,j→j'} — and, when ``problem.placed`` is set, with placement
     binaries y_{i,j} priced by lead-time-aware transition costs (see
@@ -228,6 +309,7 @@ def solve_with_routing(problem: ProvisionProblem,
     theta = np.asarray(problem.theta, float)
     rho = _demand(problem)
     placement = problem.placed is not None
+    struct = _structure_for(_static_key(problem, True, rho))
     nv = l * r * g
     nw = l * r * r
     ny = l * r if placement else 0
@@ -343,13 +425,18 @@ def solve_with_routing(problem: ProvisionProblem,
         bounds += [((0.0, 0.0) if not deployable[i, j] else
                     (1.0, 1.0) if pinned[i, j] else (0.0, 1.0))
                    for i in range(l) for j in range(r)]
-    integrality = np.concatenate([np.ones(nv, bool),
-                                  np.zeros(nv + nw, bool),
-                                  np.ones(ny, bool)])
-    res = solve_ilp(np.asarray(c), A_ub=ub.matrix(ntot),
-                    b_ub=np.asarray(ub.rhs), A_eq=eq.matrix(ntot),
+    integrality = struct.get("integrality")
+    if integrality is None:
+        integrality = struct["integrality"] = np.concatenate(
+            [np.ones(nv, bool), np.zeros(nv + nw, bool),
+             np.ones(ny, bool)])
+    eq_struct = struct.setdefault("eq", {})
+    res = solve_ilp(np.asarray(c), A_ub=ub.matrix(ntot, structure=struct),
+                    b_ub=np.asarray(ub.rhs),
+                    A_eq=eq.matrix(ntot, structure=eq_struct),
                     b_eq=np.asarray(eq.rhs), bounds=bounds,
-                    integrality=integrality, max_nodes=max_nodes)
+                    integrality=integrality, max_nodes=max_nodes,
+                    backend=backend, x0=x0)
     delta = res.x[:nv].reshape(l, r, g)
     omega = res.x[2 * nv:2 * nv + nw].reshape(l, r, r)
     y = (np.round(res.x[2 * nv + nw:]).reshape(l, r)

@@ -20,8 +20,11 @@ bit-identical across repeats).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import heapq
 import math
+import os
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -31,6 +34,8 @@ import jax.numpy as jnp
 
 from repro.api.capabilities import capability
 from repro.api.plan import Plan, PlacementState
+from repro.control.amortize import DEFAULT_CACHE as _SOLVE_CACHE
+from repro.control.fleet import FleetForecast
 from repro.sim.metrics import Report
 from repro.sim.perfmodel import PROFILES, PerfProfile
 from repro.sim.simulator import SimConfig
@@ -44,6 +49,12 @@ from repro.sim.vector.report import ReplicaAccumulator
 
 _EPS = 1e-9
 _DRAIN_RING = 3   # scale-ins serve ~1 bucket before reaping to spot
+
+#: carry keys the hourly control boundary *reads* (aggregate signals
+#: fed to the planner) and the four it *writes* — the batched boundary
+#: transfers exactly these slices instead of materializing the carry
+_HOUR_READS = ("live", "ring", "dep", "wloc", "warm", "down")
+_HOUR_WRITES = ("tgt", "fc", "omega", "has_om")
 
 
 class _Static:
@@ -355,10 +366,15 @@ def _compiled_segments(st: _Static):
         return jax.lax.scan(lambda c, x: step(prm, c, x), carry, xs)
 
     # donated carry: the scan consumes the previous segment's state
-    # in place (R6 checks this under src/repro/sim/vector)
+    # in place (R6 checks this under src/repro/sim/vector).  The
+    # batched runner must NOT donate: its carry stays device-resident
+    # between segments (``carry = out``), and donating device-resident
+    # buffers into this executable corrupts the CPU-backend heap
+    # (double free) on jaxlib 0.4.x — the single path only ever feeds
+    # freshly transferred host arrays, where donation is safe.
     seg_single = jax.jit(run_seg, donate_argnums=(1,))  # reprolint: disable=R6 -- cache-once: stored in module-level _SEG_CACHE keyed by static config
-    seg_batched = jax.jit(  # reprolint: disable=R6 -- cache-once: stored in module-level _SEG_CACHE keyed by static config
-        jax.vmap(run_seg, in_axes=(0, 0, None)), donate_argnums=(1,))
+    seg_batched = jax.jit(  # reprolint: disable=R6 -- device-resident carry chain: donation would double-free on the CPU backend; cache-once in _SEG_CACHE
+        jax.vmap(run_seg, in_axes=(0, 0, None)))
     _SEG_CACHE[key] = (seg_single, seg_batched)
     return _SEG_CACHE[key]
 
@@ -422,7 +438,8 @@ class VectorBatch:
                  models: Optional[List[str]] = None,
                  regions: Optional[List[str]] = None,
                  profiles: Optional[Dict[str, PerfProfile]] = None,
-                 batched: bool = True):
+                 batched: bool = True,
+                 control_workers: Optional[int] = None):
         if not isinstance(trace, Trace):
             trace = Trace.from_requests(trace)
         self.trace = trace.sorted_by_arrival()
@@ -447,6 +464,17 @@ class VectorBatch:
                 "siloed pools with a non-reactive scaler have no "
                 "vector lowering (LT/Chiron act on the unified pool)")
         self.batched = batched
+        # plan solves run on a small thread pool (scipy/HiGHS releases
+        # the GIL); results are collected in replica order, so the
+        # emitted plans are identical for any worker count
+        if control_workers is None:
+            control_workers = int(os.environ.get(
+                "REPRO_CONTROL_WORKERS",
+                max(1, min(8, os.cpu_count() or 1))))
+        self.control_workers = max(1, control_workers)
+        #: per-boundary control-plane timing/dedupe totals, filled by
+        #: ``run()`` — see docs/PERF.md "control plane at sweep scale"
+        self.control_stats: Dict[str, float] = {}
         self.st = _Static(self.models, self.regions, self.rps[0].pools,
                           self.profiles, cfg0.tick)
         self._seg_single, self._seg_batched = _compiled_segments(self.st)
@@ -512,12 +540,9 @@ class VectorBatch:
         self._seq = seq
         return ev
 
-    def _apply_hour(self, rep_i: int, cv: Dict[str, np.ndarray],
-                    t: float, bk: BucketedTrace,
-                    heap: List) -> None:
-        st, rp = self.st, self.rps[rep_i]
-        if rp.controller is None:
-            return
+    def _instances(self, cv: Dict[str, np.ndarray]
+                   ) -> Dict[Tuple[str, str], int]:
+        st = self.st
         live, ring = cv["live"], cv["ring"]
         pend = ring.sum(axis=0)
         instances: Dict[Tuple[str, str], int] = {}
@@ -526,27 +551,53 @@ class VectorBatch:
                 n = sum(live[mi * st.P + p, ji] + pend[mi * st.P + p, ji]
                         for p in range(st.P))
                 instances[(m, r)] = int(round(n))
+        return instances
+
+    def _feed_placement(self, rep_i: int,
+                        cv: Dict[str, np.ndarray]) -> None:
+        st, rp = self.st, self.rps[rep_i]
         feed = capability(rp.controller, "set_placement_state")
-        if feed is not None:
-            placed = frozenset((m, r) for mi, m in enumerate(st.models)
-                               for ji, r in enumerate(st.regions)
-                               if cv["dep"][mi, ji] > 0.5)
-            wl = frozenset((m, r) for mi, m in enumerate(st.models)
+        if feed is None:
+            return
+        placed = frozenset((m, r) for mi, m in enumerate(st.models)
                            for ji, r in enumerate(st.regions)
-                           if cv["wloc"][mi, ji] > 0.5)
-            ws = {(m, r): int(cv["warm"][mi, ji])
-                  for mi, m in enumerate(st.models)
-                  for ji, r in enumerate(st.regions)
-                  if cv["warm"][mi, ji] >= 1.0}
-            dn = frozenset(r for ji, r in enumerate(st.regions)
-                           if cv["down"][ji] > 0.5)
-            feed(PlacementState(placed=placed, weights_local=wl,
-                                warm_spot=ws, down_regions=dn))
-        cfg = rp.cfg
-        lookback = max(cfg.history_lookback, 3600.0 + 2 * cfg.tps_window)
+                           if cv["dep"][mi, ji] > 0.5)
+        wl = frozenset((m, r) for mi, m in enumerate(st.models)
+                       for ji, r in enumerate(st.regions)
+                       if cv["wloc"][mi, ji] > 0.5)
+        ws = {(m, r): int(cv["warm"][mi, ji])
+              for mi, m in enumerate(st.models)
+              for ji, r in enumerate(st.regions)
+              if cv["warm"][mi, ji] >= 1.0}
+        dn = frozenset(r for ji, r in enumerate(st.regions)
+                       if cv["down"][ji] > 0.5)
+        feed(PlacementState(placed=placed, weights_local=wl,
+                            warm_spot=ws, down_regions=dn))
+
+    def _lookback(self, rep_i: int) -> float:
+        cfg = self.rps[rep_i].cfg
+        return max(cfg.history_lookback, 3600.0 + 2 * cfg.tps_window)
+
+    def _apply_hour(self, rep_i: int, cv: Dict[str, np.ndarray],
+                    t: float, bk: BucketedTrace,
+                    heap: List) -> None:
+        """Serial reference path: one replica's full hourly round —
+        signal extraction, its own forecast, solve, apply."""
+        rp = self.rps[rep_i]
+        if rp.controller is None:
+            return
+        instances = self._instances(cv)
+        self._feed_placement(rep_i, cv)
         plan = rp.controller.plan(t, instances,
-                                  bk.planner_series(t, lookback),
+                                  bk.planner_series(t, self._lookback(rep_i)),
                                   bk.niw_last_hour(t))
+        self._apply_plan(rep_i, cv, t, plan, heap)
+
+    def _apply_plan(self, rep_i: int, cv: Dict[str, np.ndarray],
+                    t: float, plan, heap: List) -> None:
+        """Write one replica's hourly plan into array state: stage or
+        actuate placement actions, overwrite targets/forecasts/ω."""
+        st, rp = self.st, self.rps[rep_i]
         if isinstance(plan, tuple):
             targets, forecasts = plan
             plan = Plan(t=t, targets=targets, forecasts=forecasts)
@@ -628,6 +679,87 @@ class VectorBatch:
             cv["warm"][mi, ji] += pend
             cv["ring"][:, c, ji] = 0.0
 
+    # --------------------------------------------------- batched boundaries
+    def _hour_round_batched(self, carry, t: float, bk: BucketedTrace,
+                            heap: List):
+        """One hourly boundary for the whole batch: ``device_get`` only
+        the aggregate-signal slices the planners read, run ONE
+        fleet-wide stacked forecast, solve the per-replica ILPs on a
+        thread pool (plans collected in replica order — identical for
+        any worker count), then write the four plan keys back.  The
+        rest of the carry stays device-resident.  Returns the updated
+        carry (fully host-materialized only if a plan actuates a
+        placement *now*, which touches far more than the plan slice)."""
+        cs = self.control_stats
+        ctrl = [i for i, rp in enumerate(self.rps)
+                if rp.controller is not None]
+        if not ctrl:
+            return carry
+        cs["boundaries"] += 1
+        t0 = time.perf_counter()
+        # np.array: device_get on CPU returns zero-copy read-only views
+        # into device buffers the next (donating) segment call frees —
+        # the boundary needs its own writable host copies
+        pulled = {k: np.array(v) for k, v in jax.device_get(
+            {k: carry[k] for k in _HOUR_READS + _HOUR_WRITES}).items()}
+        cs["transfer_s"] += time.perf_counter() - t0
+        cvs = {i: {k: pulled[k][i] for k in pulled} for i in ctrl}
+        insts = {}
+        for i in ctrl:
+            self._feed_placement(i, cvs[i])
+            insts[i] = self._instances(cvs[i])
+        # histories come from the shared bucketized trace (host side)
+        # and are identical across replicas with equal lookbacks:
+        # build each distinct dict once
+        t0 = time.perf_counter()
+        hist_by_lb: Dict[float, Dict] = {}
+        hists = {}
+        for i in ctrl:
+            lb = self._lookback(i)
+            if lb not in hist_by_lb:
+                hist_by_lb[lb] = bk.planner_series(t, lb)
+            hists[i] = hist_by_lb[lb]
+        niw = bk.niw_last_hour(t)
+        fitted = self._fleet.fit({str(i): hists[i] for i in ctrl
+                                  if self._fleet.batched(str(i))})
+        cs["forecast_s"] += time.perf_counter() - t0
+
+        def solve_one(i):
+            rp = self.rps[i]
+            fit = fitted.get(str(i))
+            if fit is not None:
+                fn = capability(rp.controller, "plan_fitted")
+                return fn(t, insts[i], hists[i], niw, fit)
+            return rp.controller.plan(t, insts[i], hists[i], niw)
+
+        t0 = time.perf_counter()
+        if self._pool is not None and len(ctrl) > 1:
+            plans = list(self._pool.map(solve_one, ctrl))
+        else:
+            plans = [solve_one(i) for i in ctrl]
+        cs["ilp_s"] += time.perf_counter() - t0
+        cs["plans"] += len(plans)
+
+        t0 = time.perf_counter()
+        immediate = any(
+            getattr(p, "placement", None) is not None and
+            any(a.effective_at <= t for a in p.placement.actions)
+            for p in plans)
+        if immediate:
+            carry = jax.tree_util.tree_map(
+                np.array, jax.device_get(carry))
+            for i, plan in zip(ctrl, plans):
+                cv = {k: v[i] for k, v in carry.items()}
+                self._apply_plan(i, cv, t, plan, heap)
+        else:
+            for i, plan in zip(ctrl, plans):
+                self._apply_plan(i, cvs[i], t, plan, heap)
+            carry = dict(carry)
+            for k in _HOUR_WRITES:   # mutated through the cvs views
+                carry[k] = pulled[k]
+        cs["apply_s"] += time.perf_counter() - t0
+        return carry
+
     # ------------------------------------------------------------ main loop
     def run(self) -> List[Report]:
         st = self.st
@@ -647,50 +779,94 @@ class VectorBatch:
         heap = self._schedule(horizon)
         prms = [_prm(st, rp) for rp in self.rps]
         carries = [_init_carry(st, rp) for rp in self.rps]
+        host = lambda tree: jax.tree_util.tree_map(
+            np.array, jax.device_get(tree))
+        self.control_stats = {"boundaries": 0, "plans": 0,
+                              "forecast_s": 0.0, "ilp_s": 0.0,
+                              "transfer_s": 0.0, "apply_s": 0.0}
+        ctrl_ids = [i for i, rp in enumerate(self.rps)
+                    if rp.controller is not None]
+        self._fleet = FleetForecast(
+            {str(i): self.rps[i].controller for i in ctrl_ids}) \
+            if (self.batched and ctrl_ids) else None
+        self._pool = None
+        if (self.batched and self.control_workers > 1
+                and len(ctrl_ids) > 1):
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=self.control_workers)
+        sc0 = _SOLVE_CACHE.stats()
         if self.batched:
             prm = jax.tree_util.tree_map(
                 lambda *xs: np.stack(xs), *prms)
             carry = jax.tree_util.tree_map(
                 lambda *xs: np.stack(xs), *carries)
-        b0 = 0
-        while b0 < B:
-            while heap and heap[0][0] <= b0:
-                _, _, kind, ri, payload = heapq.heappop(heap)
-                targets = range(R) if ri < 0 else (ri,)
-                for i in targets:
-                    if self.batched:
-                        cv = {k: v[i] for k, v in carry.items()}
-                    else:
-                        cv = carries[i]
+        try:
+            b0 = 0
+            while b0 < B:
+                events = []
+                while heap and heap[0][0] <= b0:
+                    events.append(heapq.heappop(heap))
+                if events:
                     t = b0 * st.dt
-                    if kind == "hour":
-                        self._apply_hour(i, cv, t, bk, heap)
-                    elif kind == "down":
-                        self._apply_down(i, cv, payload)
-                    elif kind == "up":
-                        cv["down"][payload] = 0.0
-                    elif kind == "place":
-                        self._apply_place(i, cv, payload, b0)
-            b1 = min(heap[0][0] if heap else B, B)
-            b1 = max(b1, b0 + 1)
-            xs_seg = {k: v[b0:b1] for k, v in xs_full.items()}
-            host = lambda tree: jax.tree_util.tree_map(
-                np.array, jax.device_get(tree))
-            if self.batched:
-                out, ys = self._seg_batched(prm, carry, xs_seg)
-                ys = jax.device_get(ys)
-                for i, acc in enumerate(accs):
-                    acc.ingest(b0, {k: v[i] for k, v in ys.items()})
-                carry = host(out)
-            else:
-                new_carries = []
-                for i, acc in enumerate(accs):
-                    out, ys = self._seg_single(prms[i], carries[i],
-                                               xs_seg)
-                    new_carries.append(host(out))
-                    acc.ingest(b0, jax.device_get(ys))
-                carries = new_carries
-            b0 = b1
+                    if self.batched and all(
+                            e[2] == "hour" and e[3] < 0 for e in events):
+                        for _ in events:
+                            carry = self._hour_round_batched(
+                                carry, t, bk, heap)
+                    else:
+                        # mixed or per-replica events (outage down/up,
+                        # staged placements): materialize and use the
+                        # serial per-event path
+                        if self.batched:
+                            carry = host(carry)
+                        for _, _, kind, ri, payload in events:
+                            for i in (range(R) if ri < 0 else (ri,)):
+                                cv = ({k: v[i] for k, v in carry.items()}
+                                      if self.batched else carries[i])
+                                if kind == "hour":
+                                    self._apply_hour(i, cv, t, bk, heap)
+                                elif kind == "down":
+                                    self._apply_down(i, cv, payload)
+                                elif kind == "up":
+                                    cv["down"][payload] = 0.0
+                                elif kind == "place":
+                                    self._apply_place(i, cv, payload, b0)
+                b1 = min(heap[0][0] if heap else B, B)
+                b1 = max(b1, b0 + 1)
+                xs_seg = {k: v[b0:b1] for k, v in xs_full.items()}
+                if self.batched:
+                    out, ys = self._seg_batched(prm, carry, xs_seg)
+                    # host(): accumulators retain slices of ys past this
+                    # segment, and zero-copy device_get views would alias
+                    # buffers the next donating call reuses
+                    ys = host(ys)
+                    for i, acc in enumerate(accs):
+                        acc.ingest(b0, {k: v[i] for k, v in ys.items()})
+                    # the carry stays on device between segments; only
+                    # boundary slices are ever transferred
+                    carry = out
+                else:
+                    new_carries = []
+                    for i, acc in enumerate(accs):
+                        out, ys = self._seg_single(prms[i], carries[i],
+                                                   xs_seg)
+                        new_carries.append(host(out))
+                        acc.ingest(b0, jax.device_get(ys))
+                    carries = new_carries
+                b0 = b1
+        finally:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+                self._pool = None
+        if self._fleet is not None:
+            for k, v in self._fleet.stats().items():
+                self.control_stats[f"fleet_{k}"] = v
+        sc1 = _SOLVE_CACHE.stats()
+        self.control_stats["ilp_cache_hits"] = sc1["hits"] - sc0["hits"]
+        self.control_stats["ilp_cache_misses"] = \
+            sc1["misses"] - sc0["misses"]
+        if self.batched:
+            carry = host(carry)
         reports = []
         for i, acc in enumerate(accs):
             cv = ({k: v[i] for k, v in carry.items()}

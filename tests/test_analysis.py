@@ -187,14 +187,17 @@ def test_capability_table_matches_real_implementations():
     from repro.control.routing import PlanAwareRouter, ThresholdRouter
     from repro.core.chiron import ChironPolicy
 
+    ssc = _SSC(ControllerConfig(
+        models=["a"], regions=["e"], theta={"a": 1000.0}))
     impls = {
         "home_threshold": ThresholdRouter(),
         "route_request": PlanAwareRouter(),
         "update_plan": PlanAwareRouter(),
         "wants_request_view": ReactivePolicy(),
         "initial_instances": ChironPolicy(),
-        "set_placement_state": _SSC(ControllerConfig(
-            models=["a"], regions=["e"], theta={"a": 1000.0})),
+        "set_placement_state": ssc,
+        "forecast_spec": ssc,
+        "plan_fitted": ssc,
     }
     assert set(impls) == set(CAPABILITIES)
     for name, obj in impls.items():

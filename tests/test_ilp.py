@@ -85,3 +85,106 @@ def test_scale_in_when_overprovisioned():
     prob.rho_peak[:] = 100.0   # tiny demand, big fleet
     sol = solve(prob)
     assert sol.delta.sum() < 0  # deallocates
+
+
+# ------------------------------------------------- PR-8: amortization
+def test_bnb_integral_root_early_exit():
+    """A bounds-only problem relaxes to an integral vertex: bnb must
+    return from the root (nodes == 1) with the milp objective."""
+    c = np.array([-3.0, 2.0, -1.0, 0.5])
+    bounds = [(0, 10)] * 4
+    r_bnb = solve_ilp(c, bounds=bounds, backend="bnb")
+    r_milp = solve_ilp(c, bounds=bounds, backend="milp")
+    assert r_bnb.status == "optimal"
+    assert r_bnb.nodes == 1
+    assert abs(r_bnb.objective - r_milp.objective) < 1e-9
+    # the early exit fires before warm-start seeding: a (feasible,
+    # suboptimal) x0 must not perturb the cold result bit for bit
+    r_warm = solve_ilp(c, bounds=bounds, backend="bnb",
+                       x0=np.array([1.0, 1.0, 1.0, 1.0]))
+    assert (r_warm.x == r_bnb.x).all()
+    assert r_warm.objective == r_bnb.objective
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_bnb_warm_start_preserves_objective(seed):
+    """Seeding the previous solution as incumbent prunes nodes but
+    cannot change the optimal objective; infeasible seeds are ignored."""
+    rng = np.random.default_rng(200 + seed)
+    n = 6
+    c = rng.uniform(-5, 5, n)
+    A = rng.uniform(-1, 3, (4, n))
+    b = rng.uniform(5, 20, 4)
+    bounds = [(0, 10)] * n
+    cold = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="bnb",
+                     max_nodes=5000)
+    warm = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="bnb",
+                     max_nodes=5000, x0=cold.x)
+    assert warm.status == cold.status
+    assert abs(warm.objective - cold.objective) < 1e-9
+    bad = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds, backend="bnb",
+                    max_nodes=5000, x0=np.full(n, 1e9))
+    assert abs(bad.objective - cold.objective) < 1e-9
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_structure_cache_is_transparent(seed):
+    """Repeat solves of the same static shape reuse the cached sparse
+    constraint pattern; solutions stay bit-identical to a cold build."""
+    from repro.control.provision import _PATTERN_CACHE, solve_with_routing
+
+    def both(prob):
+        return (solve(prob), solve_with_routing(prob))
+
+    prob = _random_problem(300 + seed)
+    _PATTERN_CACHE.clear()
+    s_cold, r_cold = both(prob)
+    assert _PATTERN_CACHE            # populated by the cold build
+    s_hot, r_hot = both(prob)        # pattern path
+    for a, b in ((s_cold, s_hot), (r_cold, r_hot)):
+        assert a.status == b.status
+        assert a.objective == b.objective
+        assert (a.delta == b.delta).all()
+        if a.omega is not None:
+            assert (a.omega == b.omega).all()
+
+
+@pytest.mark.parametrize("use_routing", [False, True])
+def test_solve_amortized_exact_and_cached(use_routing):
+    """The fingerprint cache returns the identical solution for an
+    identical problem, and never crosses routing modes."""
+    from repro.control.amortize import (DEFAULT_CACHE, clear_solve_cache,
+                                        solve_amortized)
+    from repro.control.provision import solve_with_routing
+
+    clear_solve_cache()
+    prob = _random_problem(42)
+    direct = (solve_with_routing(prob) if use_routing else solve(prob))
+    a1 = solve_amortized(prob, use_routing=use_routing)
+    assert DEFAULT_CACHE.misses >= 1
+    a2 = solve_amortized(prob, use_routing=use_routing)
+    assert DEFAULT_CACHE.hits >= 1
+    for sol in (a1, a2):
+        assert sol.status == direct.status
+        assert sol.objective == direct.objective
+        assert (sol.delta == direct.delta).all()
+        if direct.omega is not None:
+            assert (sol.omega == direct.omega).all()
+    # a returned solution is a private copy: callers may mutate it
+    a1.delta[:] = 99.0
+    a3 = solve_amortized(prob, use_routing=use_routing)
+    assert (a3.delta == direct.delta).all()
+
+
+def test_fingerprint_separates_problems():
+    from repro.control.amortize import problem_fingerprint
+
+    p1 = _random_problem(7)
+    p2 = _random_problem(8)
+    assert problem_fingerprint(p1, False) == problem_fingerprint(p1, False)
+    assert problem_fingerprint(p1, False) != problem_fingerprint(p2, False)
+    assert problem_fingerprint(p1, False) != problem_fingerprint(p1, True)
+    bumped = _random_problem(7)
+    bumped.rho_peak = bumped.rho_peak + 1.0
+    assert (problem_fingerprint(p1, False)
+            != problem_fingerprint(bumped, False))
