@@ -4,11 +4,17 @@ Runs the same engine as ``python -m repro.analysis --json`` and prints
 a per-rule table (unsuppressed + suppressed), optionally writing a JSON
 artifact next to the other ``BENCH_*.json`` files::
 
-    python -m benchmarks.lint_report [--paths src ...] [--out BENCH_lint.json]
+    python -m benchmarks.lint_report [--paths src ...] [--trace]
+                                     [--out BENCH_lint.json]
+
+With ``--trace`` the jaxpr/lowering tier (T1-T4) runs too and its
+checks are appended to the table and the artifact.
 
 The intended trend: unsuppressed counts stay at zero (check.sh gates on
 it); the *suppressed* counts are the debt ledger — growth there means
-contracts are being waived faster than fixed.
+contracts are being waived faster than fixed.  W0 stale-suppression
+warnings are the ledger's expiry notices: a nonzero count means some of
+that debt is already paid off and the waiver should be deleted.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--paths", nargs="*", default=None,
                         help="paths to lint (default: the repro tree)")
+    parser.add_argument("--trace", action="store_true",
+                        help="also run the trace tier (T1-T4)")
     parser.add_argument("--out", default=None,
                         help="write the JSON report here")
     args = parser.parse_args(argv)
@@ -38,17 +46,38 @@ def main(argv=None) -> int:
               f"{sup_counts.get(rid, 0):11d}  {RULE_DOCS[rid]}")
     total = len(result.violations)
     print(f"{'total':6} {total:5d} {len(result.suppressed):11d}  "
-          f"({result.files_checked} files)")
+          f"({result.files_checked} files, "
+          f"{len(result.warnings)} stale-suppression warning(s))")
+    for w in result.warnings:
+        print(f"  {w.render()} [warning]")
+
+    trace_result = None
+    if args.trace:
+        from repro.analysis.trace import TRACE_RULE_DOCS, run_trace
+        trace_result = run_trace()
+        t_counts: dict = {}
+        for v in trace_result.violations:
+            t_counts[v.rule] = t_counts.get(v.rule, 0) + 1
+        for rid, doc in TRACE_RULE_DOCS.items():
+            print(f"{rid:6} {t_counts.get(rid, 0):5d} {'-':>11}  {doc}")
+        print(f"trace tier: {len(trace_result.checks)} check(s), "
+              f"{len(trace_result.violations)} violation(s) in "
+              f"{trace_result.elapsed_s:.1f}s")
 
     if args.out:
         report = {"files_checked": result.files_checked,
                   "counts": result.counts,
                   "suppressed_counts": dict(sorted(sup_counts.items())),
-                  "violations": [v.to_json() for v in result.violations]}
+                  "violations": [v.to_json() for v in result.violations],
+                  "warnings": [w.to_json() for w in result.warnings]}
+        if trace_result is not None:
+            report["trace"] = trace_result.to_json()
         with open(args.out, "w") as fh:
             json.dump(report, fh, indent=1, sort_keys=True)
         print(f"wrote {args.out}")
-    return 1 if result.violations else 0
+    failed = bool(result.violations) or \
+        bool(trace_result and trace_result.violations)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

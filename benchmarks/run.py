@@ -123,7 +123,8 @@ def week(engine="vector", jobs=None, quick=False, out=None,
                 for k in ("forecast_s", "ilp_s", "transfer_s", "apply_s"):
                     agg[k] += float(ctl.get(k, 0.0))
                 for k, v in ctl.items():
-                    if k.startswith(("fleet_", "ilp_cache_")):
+                    if k.startswith(("fleet_", "ilp_cache_",
+                                     "fit_cache_", "seg_cache_")):
                         counters[k] = counters.get(k, 0) + v
     wall = time.time() - t_start
     csv_line("week.total_wall_s", round(wall, 1),

@@ -13,8 +13,8 @@ if [[ "${1:-}" == "--fast" ]]; then
   PYTEST_ARGS+=(-x)
 fi
 
-echo "== static analysis (reprolint, docs/ANALYSIS.md) =="
-python -m repro.analysis src
+echo "== static analysis (reprolint AST tier + trace tier, docs/ANALYSIS.md) =="
+python -m repro.analysis --trace src
 
 echo "== tier-1 tests =="
 python -m pytest "${PYTEST_ARGS[@]}"

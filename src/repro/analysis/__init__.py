@@ -1,17 +1,21 @@
-"""reprolint — stdlib-ast static analysis for the duck-typed control
-plane.
+"""reprolint — static analysis for the duck-typed control plane.
+
+Two tiers (see docs/ANALYSIS.md):
+
+- the AST tier (R0–R7): analyzed code is parsed, never imported;
+- the trace tier (T1–T4, ``--trace``): imports the real hot paths and
+  checks their jaxprs and compiled lowerings — import it lazily via
+  ``repro.analysis.trace`` (it pulls in jax and the vector engine).
 
 Usage::
 
-    python -m repro.analysis [--json] [paths...]
+    python -m repro.analysis [--json] [--trace] [paths...]
 
 or programmatically::
 
     from repro.analysis import run_lint
     result = run_lint(["src"])
     assert not result.violations
-
-See docs/ANALYSIS.md for the rule catalog and suppression syntax.
 """
 from repro.analysis.core import (LintResult, Violation, run_lint)
 from repro.analysis.rules import ALL_RULES, RULE_DOCS

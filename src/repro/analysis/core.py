@@ -27,6 +27,7 @@ _SUPPRESS_RE = re.compile(
     r"(?:\s*--\s*(?P<reason>\S.*))?\s*$")
 
 BAD_SUPPRESSION = "R0"
+STALE_SUPPRESSION = "W0"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +37,7 @@ class Violation:
     line: int
     col: int
     message: str
+    severity: str = "error"   # "error" gates exit code; "warning" does not
 
     def render(self) -> str:
         return f"{self.file}:{self.line}:{self.col}: {self.rule} {self.message}"
@@ -62,7 +64,11 @@ class SourceFile:
         self.display = display
         self.text = text
         self.tree = ast.parse(text, filename=display)
-        self.suppressions: List[Suppression] = _scan_suppressions(text)
+        #: every real comment, as (line, text) — rules with their own
+        #: marker syntax (R7 cache-key contracts) scan these
+        self.comments, self.code_lines = _scan_comments(text)
+        self.suppressions: List[Suppression] = _parse_suppressions(
+            self.comments, self.code_lines)
         # line -> set of suppressed rules (only reasons-present entries)
         self._by_line: Dict[int, Set[str]] = {}
         for s in self.suppressions:
@@ -75,16 +81,16 @@ class SourceFile:
         return rule in self._by_line.get(line, ())
 
 
-def _scan_suppressions(text: str) -> List[Suppression]:
-    """Extract reprolint suppression comments via the tokenizer (real
-    comments only — a marker inside a string literal is ignored)."""
-    out: List[Suppression] = []
+def _scan_comments(text: str) -> Tuple[List[Tuple[int, str]], Set[int]]:
+    """Tokenize ``text`` into (comments, code_lines): every real comment
+    as (line, text) — a marker inside a string literal is ignored — plus
+    the set of lines carrying non-comment tokens."""
+    comments: List[Tuple[int, str]] = []
+    code_lines: Set[int] = set()
     try:
         tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
     except tokenize.TokenError:
-        return out
-    code_lines: Set[int] = set()
-    comments: List[Tuple[int, str]] = []
+        return comments, code_lines
     for tok in tokens:
         if tok.type == tokenize.COMMENT:
             comments.append((tok.start[0], tok.string))
@@ -93,6 +99,12 @@ def _scan_suppressions(text: str) -> List[Suppression]:
                               tokenize.ENCODING, tokenize.ENDMARKER):
             for ln in range(tok.start[0], tok.end[0] + 1):
                 code_lines.add(ln)
+    return comments, code_lines
+
+
+def _parse_suppressions(comments: List[Tuple[int, str]],
+                        code_lines: Set[int]) -> List[Suppression]:
+    out: List[Suppression] = []
     for line, comment in comments:
         m = _SUPPRESS_RE.search(comment)
         if not m:
@@ -110,6 +122,9 @@ class LintResult:
     violations: List[Violation]
     suppressed: List[Violation]
     files_checked: int
+    #: warning-tier findings (W0 stale suppressions): reported, never
+    #: gate the exit code
+    warnings: List[Violation] = dataclasses.field(default_factory=list)
 
     @property
     def counts(self) -> Dict[str, int]:
@@ -124,6 +139,7 @@ class LintResult:
             "counts": self.counts,
             "violations": [v.to_json() for v in self.violations],
             "suppressed": [v.to_json() for v in self.suppressed],
+            "warnings": [v.to_json() for v in self.warnings],
         }
 
 
@@ -226,7 +242,39 @@ def run_lint(paths: Optional[Sequence[str]] = None,
             kept.append(v)
     kept.sort(key=lambda v: (v.file, v.line, v.col, v.rule))
     suppressed.sort(key=lambda v: (v.file, v.line, v.col, v.rule))
-    return LintResult(kept, suppressed, files_checked=len(in_scope))
+    warnings = _stale_suppressions(
+        sources, in_scope, raw, {r.RULE_ID for r in active})
+    return LintResult(kept, suppressed, files_checked=len(in_scope),
+                      warnings=warnings)
+
+
+def _stale_suppressions(sources: List[SourceFile], in_scope: Set[str],
+                        raw: List[Violation],
+                        active_ids: Set[str]) -> List[Violation]:
+    """W0: a reasoned suppression whose rules (among those that actually
+    ran) no longer fire at its target line — dead weight that hides the
+    next real violation on that line."""
+    fired = {(v.file, v.line, v.rule) for v in raw}
+    out: List[Violation] = []
+    for sf in sources:
+        if sf.display not in in_scope:
+            continue
+        for s in sf.suppressions:
+            if s.reason is None:
+                continue
+            checkable = [r for r in s.rules if r in active_ids]
+            if not checkable:
+                continue
+            target = s.line + 1 if s.comment_only else s.line
+            if any((sf.display, target, r) in fired for r in checkable):
+                continue
+            out.append(Violation(
+                STALE_SUPPRESSION, sf.display, s.line, 0,
+                f"stale suppression: {','.join(checkable)} no longer "
+                f"fire(s) on line {target}; remove the disable comment",
+                severity="warning"))
+    out.sort(key=lambda v: (v.file, v.line))
+    return out
 
 
 def _bad_suppressions(model) -> List[Violation]:

@@ -298,8 +298,11 @@ def dotted_name(node: ast.AST) -> str:
 
 
 #: paths exempt from determinism/host-sync rules: measurement-only code
-#: where wall-clock reads and host syncs are the point.
-_MEASUREMENT_MARKERS = ("train/loop.py", "launch/", "benchmarks/")
+#: where wall-clock reads and host syncs are the point.  The trace tier
+#: itself qualifies — it deliberately re-jits and lowers the hot paths
+#: to inspect them.
+_MEASUREMENT_MARKERS = ("train/loop.py", "launch/", "benchmarks/",
+                        "analysis/trace.py")
 
 
 def is_measurement_path(display: str) -> bool:

@@ -7,7 +7,8 @@ docs/ANALYSIS.md).
 """
 from __future__ import annotations
 
-from repro.analysis import (rules_capability, rules_determinism, rules_jax,
+from repro.analysis import (rules_cachekey, rules_capability,
+                            rules_determinism, rules_jax,
                             rules_readmutation, rules_registry,
                             rules_roundtrip)
 
@@ -18,6 +19,7 @@ ALL_RULES = (
     rules_determinism,    # R4 determinism hazards
     rules_readmutation,   # R5 defaultdict read-path mutation
     rules_jax,            # R6 JAX/Pallas hazards
+    rules_cachekey,       # R7 cache-key completeness
 )
 
 RULE_DOCS = {mod.RULE_ID: (mod.__doc__ or "").strip().splitlines()[0]

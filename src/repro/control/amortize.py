@@ -46,11 +46,14 @@ def _part(a, decimals: int) -> bytes:
     return repr(arr.shape).encode() + arr.tobytes()
 
 
+# reprolint: cache-key=ProvisionProblem
 def problem_fingerprint(problem: ProvisionProblem, use_routing: bool,
                         spill_cost_per_tps: float = 0.0,
                         decimals: int = 9) -> bytes:
     """Digest of every input the solve reads.  Two problems with equal
-    fingerprints yield bit-identical solutions (deterministic solver)."""
+    fingerprints yield bit-identical solutions (deterministic solver).
+    R7 (cache-key completeness) gates that every ``ProvisionProblem``
+    field stays hashed here — a new field fails lint until it is."""
     h = hashlib.blake2b(digest_size=16)
     for a in (problem.n, problem.theta, problem.alpha, problem.sigma,
               problem.rho_peak, problem.buffer, problem.region_cap,
@@ -86,6 +89,7 @@ class SolveCache:
         self._warm: Dict[Tuple, np.ndarray] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, sig: bytes) -> Optional[ProvisionSolution]:
         with self._lock:
@@ -103,6 +107,7 @@ class SolveCache:
             self._sols.move_to_end(sig)
             while len(self._sols) > self._max:
                 self._sols.popitem(last=False)
+                self.evictions += 1
 
     def warm_get(self, key: Tuple) -> Optional[np.ndarray]:
         with self._lock:
@@ -121,11 +126,18 @@ class SolveCache:
             self._warm.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
 
-    def stats(self) -> Dict[str, int]:
+    def cache_stats(self) -> Dict[str, int]:
+        """Uniform cache telemetry (see docs/PERF.md): lifetime hit/
+        miss/eviction counts plus current size."""
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
                     "entries": len(self._sols)}
+
+    def stats(self) -> Dict[str, int]:
+        return self.cache_stats()
 
 
 #: process-wide default used by the planner; cleared by the parity tests

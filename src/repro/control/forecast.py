@@ -44,12 +44,22 @@ Key = Tuple[str, str]
 _FIT_CACHE_MAX = 4096
 _FIT_CACHE: "collections.OrderedDict[bytes, dict]" = collections.OrderedDict()
 _FIT_CACHE_LOCK = threading.Lock()
+_FIT_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def clear_fit_cache() -> None:
-    """Drop the process-wide fit cache (tests / memory pressure)."""
+    """Drop the process-wide fit cache (tests / memory pressure).
+    Lifetime hit/miss/eviction counters are kept — consumers record
+    deltas (see the vector engine's control_stats)."""
     with _FIT_CACHE_LOCK:
         _FIT_CACHE.clear()
+
+
+def fit_cache_stats() -> Dict[str, int]:
+    """Uniform cache telemetry (see docs/PERF.md): lifetime hit/miss/
+    eviction counts plus current size of the process-wide fit cache."""
+    with _FIT_CACHE_LOCK:
+        return {**_FIT_CACHE_STATS, "entries": len(_FIT_CACHE)}
 
 
 def _fit_cache_get(sig: bytes) -> Optional[dict]:
@@ -57,6 +67,9 @@ def _fit_cache_get(sig: bytes) -> Optional[dict]:
         prm = _FIT_CACHE.get(sig)
         if prm is not None:
             _FIT_CACHE.move_to_end(sig)
+            _FIT_CACHE_STATS["hits"] += 1
+        else:
+            _FIT_CACHE_STATS["misses"] += 1
         return prm
 
 
@@ -65,6 +78,7 @@ def _fit_cache_put(sig: bytes, prm: dict) -> None:
         _FIT_CACHE[sig] = prm
         while len(_FIT_CACHE) > _FIT_CACHE_MAX:
             _FIT_CACHE.popitem(last=False)
+            _FIT_CACHE_STATS["evictions"] += 1
 
 
 @functools.partial(jax.jit, static_argnames=("p", "q"))
@@ -303,12 +317,23 @@ class BatchForecastEngine:
             return (n // self.length_quantum) * self.length_quantum
         return n
 
+    # reprolint: cache-key=__init__
     def _row_sig(self, y: np.ndarray, init: dict, s_eff: int) -> bytes:
         """Content signature of one fit: trimmed series + init params +
         everything else ``_fit_arma_core`` (and the forecast recursion)
         reads.  Two rows with equal signatures produce bit-identical
         fitted parameters and forecasts — see the batch-purity contract
         in ``fit_forecast``."""
+        # reprolint: key-exempt=seasonal_period -- hashed as s_eff (the per-group effective period)
+        # reprolint: key-exempt=warm_start -- selects init, whose leaves are hashed
+        # reprolint: key-exempt=_warm -- init source; the chosen init's leaves are hashed
+        # reprolint: key-exempt=max_fit_len -- determines the trim of y, which is hashed
+        # reprolint: key-exempt=length_quantum -- determines the trim of y, which is hashed
+        # reprolint: key-exempt=fits -- telemetry counter, not a fit input
+        # reprolint: key-exempt=batches -- telemetry counter, not a fit input
+        # reprolint: key-exempt=unique_fits -- telemetry counter, not a fit input
+        # reprolint: key-exempt=dedup_hits -- telemetry counter, not a fit input
+        # reprolint: key-exempt=cache_hits -- telemetry counter, not a fit input
         h = hashlib.blake2b(digest_size=16)
         h.update(np.ascontiguousarray(y, np.float32).tobytes())
         for leaf in jax.tree.leaves(init):

@@ -36,6 +36,7 @@ from repro.api.capabilities import capability
 from repro.api.plan import Plan, PlacementState
 from repro.control.amortize import DEFAULT_CACHE as _SOLVE_CACHE
 from repro.control.fleet import FleetForecast
+from repro.control.forecast import fit_cache_stats
 from repro.sim.metrics import Report
 from repro.sim.perfmodel import PROFILES, PerfProfile
 from repro.sim.simulator import SimConfig
@@ -91,11 +92,25 @@ class _Static:
             [mi for mi in range(self.M) for _ in pools])
         self.niw_pool = self.P - 1     # NIW lands in the last pool
 
+    # reprolint: cache-key=__init__
     def key(self) -> Tuple:
         """Everything the traced computation closes over — two groups
-        with equal keys can share one compiled kernel."""
-        return (tuple(self.models), tuple(self.regions),
-                tuple(self.pools), self.dt,
+        with equal keys share one compiled kernel.  The step closes
+        over *counts* and numeric arrays, never name strings, so the
+        key holds M/J/P rather than the labels: two fleets that differ
+        only in model/region/pool names reuse the same kernel (the
+        trace tier's T3 audit pins this — keying on names fragments
+        ``_SEG_CACHE`` with byte-identical lowerings)."""
+        # reprolint: key-exempt=models -- names are host-side labels; M is keyed
+        # reprolint: key-exempt=regions -- names are host-side labels; J is keyed
+        # reprolint: key-exempt=pools -- names are host-side labels; P is keyed
+        # reprolint: key-exempt=C -- derived: C = M * P
+        # reprolint: key-exempt=L -- derived from swap_b/local_b/remote_b maxima
+        # reprolint: key-exempt=LD -- module constant _DRAIN_RING
+        # reprolint: key-exempt=pm -- derived one-hot of (M, P)
+        # reprolint: key-exempt=cell_model -- derived index map of (M, P)
+        # reprolint: key-exempt=niw_pool -- derived: P - 1
+        return (self.M, self.J, self.P, self.dt,
                 self.kv.tobytes(), self.ptps.tobytes(),
                 self.tbt0.tobytes(), self.alpha.tobytes(),
                 self.mb.tobytes(), self.swap_b.tobytes(),
@@ -350,6 +365,17 @@ def _build_step(st: _Static):
 
 
 _SEG_CACHE: Dict[Tuple, Tuple] = {}
+_SEG_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def seg_cache_stats() -> Dict[str, int]:
+    """Uniform cache telemetry (see docs/PERF.md): lifetime hit/miss
+    counts for the compiled-segment cache.  Unbounded, so evictions is
+    always 0 — present for accessor uniformity with SolveCache and the
+    forecast fit cache."""
+    return {"hits": _SEG_CACHE_STATS["hits"],
+            "misses": _SEG_CACHE_STATS["misses"],
+            "evictions": 0, "entries": len(_SEG_CACHE)}
 
 
 def _compiled_segments(st: _Static):
@@ -359,7 +385,9 @@ def _compiled_segments(st: _Static):
     key = st.key()
     hit = _SEG_CACHE.get(key)
     if hit is not None:
+        _SEG_CACHE_STATS["hits"] += 1
         return hit
+    _SEG_CACHE_STATS["misses"] += 1
     step = _build_step(st)
 
     def run_seg(prm, carry, xs):
@@ -477,6 +505,9 @@ class VectorBatch:
         self.control_stats: Dict[str, float] = {}
         self.st = _Static(self.models, self.regions, self.rps[0].pools,
                           self.profiles, cfg0.tick)
+        # segment-cache activity happens here (construction), so run()
+        # reports deltas against this snapshot
+        self._seg_stats0 = seg_cache_stats()
         self._seg_single, self._seg_batched = _compiled_segments(self.st)
 
     # ------------------------------------------------------------ plumbing
@@ -794,7 +825,8 @@ class VectorBatch:
                 and len(ctrl_ids) > 1):
             self._pool = concurrent.futures.ThreadPoolExecutor(
                 max_workers=self.control_workers)
-        sc0 = _SOLVE_CACHE.stats()
+        sc0 = _SOLVE_CACHE.cache_stats()
+        fc0 = fit_cache_stats()
         if self.batched:
             prm = jax.tree_util.tree_map(
                 lambda *xs: np.stack(xs), *prms)
@@ -861,10 +893,18 @@ class VectorBatch:
         if self._fleet is not None:
             for k, v in self._fleet.stats().items():
                 self.control_stats[f"fleet_{k}"] = v
-        sc1 = _SOLVE_CACHE.stats()
-        self.control_stats["ilp_cache_hits"] = sc1["hits"] - sc0["hits"]
-        self.control_stats["ilp_cache_misses"] = \
-            sc1["misses"] - sc0["misses"]
+        # cache-fragmentation telemetry (T3's dynamic twin): per-run
+        # deltas of every control-plane cache, aggregated by
+        # benchmarks/run.py --week into BENCH_sim.json["control_week"]
+        sc1 = _SOLVE_CACHE.cache_stats()
+        fc1 = fit_cache_stats()
+        sg1, sg0 = seg_cache_stats(), self._seg_stats0
+        for k in ("hits", "misses", "evictions"):
+            self.control_stats[f"ilp_cache_{k}"] = sc1[k] - sc0[k]
+            self.control_stats[f"fit_cache_{k}"] = fc1[k] - fc0[k]
+        self.control_stats["seg_cache_hits"] = sg1["hits"] - sg0["hits"]
+        self.control_stats["seg_cache_misses"] = \
+            sg1["misses"] - sg0["misses"]
         if self.batched:
             carry = host(carry)
         reports = []

@@ -1,0 +1,49 @@
+"""R7 fixtures: cache-key completeness (parsed by the linter, never
+imported).  Mirrors the real dataclass-scan: a ProvisionProblem-shaped
+config whose fingerprint forgets a field must fail lint until the field
+is hashed or deliberately exempted."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class FakeProvisionProblem:
+    n: int
+    theta: float
+    alpha: float
+    freshly_added_knob: float = 0.0   # the field the digest forgot
+
+
+# reprolint: cache-key=FakeProvisionProblem
+def incomplete_fingerprint(problem):  # R7-VIOLATION-MISSING-FIELD
+    return (problem.n, problem.theta, problem.alpha)
+
+
+# reprolint: cache-key=FakeProvisionProblem
+def fingerprint_with_bad_exemptions(problem):
+    # R7-VIOLATION-NO-REASON is the exemption on the next line
+    # reprolint: key-exempt=freshly_added_knob
+    # reprolint: key-exempt=not_a_field -- R7-VIOLATION-UNKNOWN-FIELD, typo'd
+    # reprolint: key-exempt=theta -- R7-VIOLATION-STALE-EXEMPT, theta IS read
+    return (problem.n, problem.theta, problem.alpha)
+
+
+# reprolint: cache-key=NoSuchConfig
+def fingerprint_of_unknown_target(problem):  # R7-VIOLATION-UNKNOWN-TARGET
+    return (problem.n,)
+
+
+# reprolint: cache-key=FakeProvisionProblem
+def ok_exempted_fingerprint(problem):  # ok: exemption carries a reason
+    # reprolint: key-exempt=freshly_added_knob -- display-only knob, not a solve input
+    return (problem.n, problem.theta, problem.alpha)
+
+
+class FakeEngine:
+    def __init__(self, p, q):
+        self.p = p
+        self.q = q
+        self.counter = 0
+
+    # reprolint: cache-key=__init__
+    def incomplete_sig(self):  # R7-VIOLATION-INIT-MISSING
+        return (self.p,)

@@ -1,4 +1,5 @@
-"""Suppression fixture: one valid suppression, one missing its reason."""
+"""Suppression fixture: one valid suppression, one missing its reason,
+and one stale (W0): reasoned, but its rule no longer fires there."""
 import time
 
 
@@ -6,3 +7,8 @@ def measure():
     t0 = time.time()  # reprolint: disable=R4 -- fixture: measurement-only timing
     t1 = time.time()  # reprolint: disable=R4
     return t0, t1
+
+
+def fixed_long_ago():
+    x = 1 + 1  # reprolint: disable=R4 -- W0-STALE: nothing fires here anymore
+    return x

@@ -139,7 +139,7 @@ def test_json_cli_output():
         capture_output=True, text=True, env=env, cwd=str(REPO))
     assert proc.returncode == 1
     data = json.loads(proc.stdout)
-    for rule in ("R1", "R2", "R3", "R4", "R5", "R6", "R0"):
+    for rule in ("R1", "R2", "R3", "R4", "R5", "R6", "R7", "R0"):
         assert data["counts"].get(rule, 0) >= 1, rule
     assert data["files_checked"] == len(list(FIXTURES.rglob("*.py")))
 
