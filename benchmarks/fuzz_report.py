@@ -1,0 +1,208 @@
+"""Scenario-fuzz frontier report: the tracked regression surface.
+
+Runs the ``repro.workloads`` scenario fuzzer — named workload families
+crossed with stress axes (outage / popshift / burst / preemption /
+scale jitter) — through ``run_experiment(engine="vector")`` and writes
+the per-scenario dollar/SLA frontier to ``BENCH_fuzz.json``::
+
+    python -m benchmarks.fuzz_report --quick          # regen artifact
+    python -m benchmarks.fuzz_report --smoke \\
+        --check BENCH_fuzz.json                       # check.sh gate
+    python -m benchmarks.fuzz_report                  # full campaign
+
+Modes (all deterministic from the seed — rerunning a mode reproduces
+its numbers bit-for-bit on the same code):
+
+- ``--quick``: every named family pure + 6 composed scenarios on the
+  sageserve/reactive stacks; the grid committed as ``BENCH_fuzz.json``.
+- ``--smoke``: a fixed 5-scenario subset of the *same* quick grid
+  (3 pure families + 2 compositions, 2 stacks, ≤90 s) — with
+  ``--check`` it fails on frontier regression vs the committed
+  artifact: per-stack gpu-dollars off by more than ``--tol-dollars``
+  (relative), worst-tier IW SLA attainment down more than
+  ``--tol-sla`` (absolute), or a scenario/stack missing.
+- default: the full campaign (2 days, 4 stacks, 10 compositions).
+
+The artifact records, per scenario: the axis composition, per-stack
+cost/SLA/drop metrics, which stacks are frontier-dominated, and deltas
+vs the ``sageserve`` default stack.  See docs/WORKLOADS.md for the key
+table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import csv_line                            # noqa: F401
+from repro.api.experiment import run_experiment
+from repro.workloads import (BASELINE_STACK, FuzzSpec, fuzz_experiment,
+                             fuzz_scenarios, score_results)
+
+SCHEMA = "repro.fuzz/v1"
+
+#: the fixed --smoke subset of the quick grid: pure families exercising
+#: sessions, floods and the plain diurnal baseline, plus the first two
+#: composed scenarios.  Subsetting (not re-fuzzing) keeps every smoke
+#: workload byte-identical to its quick-grid counterpart, so the smoke
+#: numbers are directly comparable to the committed artifact.
+SMOKE_PURE = ("steady-diurnal", "chat-sessions", "niw-report-flood")
+SMOKE_COMPOSED_PREFIXES = ("fuzz00/", "fuzz01/")
+
+
+def quick_spec() -> FuzzSpec:
+    return FuzzSpec(seed=0, days=1.0, scale=0.02, n_composed=6,
+                    stacks=("sageserve", "reactive"))
+
+
+def full_spec() -> FuzzSpec:
+    return FuzzSpec(seed=0, days=2.0, scale=0.05, n_composed=10,
+                    stacks=("sageserve", "reactive", "lt-ua", "chiron"))
+
+
+def _smoke_filter(scenarios):
+    keep = []
+    for sc in scenarios:
+        if sc.name.startswith("pure/") and sc.family in SMOKE_PURE:
+            keep.append(sc)
+        elif sc.name.startswith(SMOKE_COMPOSED_PREFIXES):
+            keep.append(sc)
+    return tuple(keep)
+
+
+def run_fuzz(spec: FuzzSpec, mode: str) -> Dict:
+    scenarios = fuzz_scenarios(spec)
+    if mode == "smoke":
+        scenarios = _smoke_filter(scenarios)
+    exp = fuzz_experiment(spec, scenarios)
+    t0 = time.perf_counter()
+    results = run_experiment(exp)
+    wall = time.perf_counter() - t0
+    doc = {"schema": SCHEMA, "mode": mode, "spec": spec.to_dict()}
+    doc.update(score_results(spec, scenarios, results,
+                             baseline=BASELINE_STACK))
+    doc["summary"]["wall_s"] = round(wall, 1)
+    doc["summary"]["n_variants"] = len(results)
+    return doc
+
+
+def check_against(baseline_doc: Dict, new_doc: Dict, tol_dollars: float,
+                  tol_sla: float) -> List[str]:
+    """Frontier-regression comparison: every scenario/stack the new run
+    scored must exist in the committed artifact and stay within
+    tolerance on cost and worst-tier IW SLA."""
+    failures: List[str] = []
+    base_sc = baseline_doc.get("scenarios", {})
+    for name in sorted(new_doc["scenarios"]):
+        row = new_doc["scenarios"][name]
+        b = base_sc.get(name)
+        if b is None:
+            failures.append(
+                f"{name}: scenario not in committed artifact — the fuzz "
+                f"grammar changed; regenerate with --quick")
+            continue
+        for stack in sorted(row["stacks"]):
+            m = row["stacks"][stack]
+            bm = b["stacks"].get(stack)
+            if bm is None:
+                failures.append(
+                    f"{name}/{stack}: stack not in committed artifact")
+                continue
+            bd, nd = bm["gpu_dollars"], m["gpu_dollars"]
+            if bd > 0 and abs(nd - bd) / bd > tol_dollars:
+                failures.append(
+                    f"{name}/{stack}: gpu_dollars {nd:.0f} vs committed "
+                    f"{bd:.0f} ({100 * (nd / bd - 1):+.1f}% > "
+                    f"±{100 * tol_dollars:.0f}%)")
+            if m["iw_sla_min"] < bm["iw_sla_min"] - tol_sla:
+                failures.append(
+                    f"{name}/{stack}: iw_sla_min {m['iw_sla_min']:.4f} "
+                    f"vs committed {bm['iw_sla_min']:.4f} (dropped more "
+                    f"than {tol_sla})")
+    return failures
+
+
+def _print_table(doc: Dict) -> None:
+    stacks = doc["spec"]["stacks"]
+    hdr = "scenario".ljust(44) + "".join(
+        f"{s:>12} $ {'sla':>8}" for s in stacks)
+    print(hdr)
+    for name in sorted(doc["scenarios"]):
+        row = doc["scenarios"][name]
+        cells = ""
+        for s in stacks:
+            m = row["stacks"].get(s)
+            cells += (f"{m['gpu_dollars']:>13.0f} {m['iw_sla_min']:>8.4f}"
+                      if m else f"{'—':>13} {'—':>8}")
+        dom = f"  dominated: {','.join(row['dominated'])}" \
+            if row["dominated"] else ""
+        print(name.ljust(44) + cells + dom)
+    summ = doc["summary"]
+    csv_line("fuzz.n_scenarios", summ["n_scenarios"])
+    csv_line("fuzz.n_families", summ["n_families"])
+    csv_line("fuzz.n_variants", summ["n_variants"])
+    csv_line("fuzz.wall_s", summ["wall_s"])
+    for s in stacks:
+        csv_line(f"fuzz.dominated.{s}", summ["dominated_counts"][s])
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    mode = parser.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="the committed-artifact grid (all families, "
+                           "6 compositions, 2 stacks)")
+    mode.add_argument("--smoke", action="store_true",
+                      help="fixed 5-scenario subset of the quick grid "
+                           "(check.sh gate, <=90s)")
+    parser.add_argument("--out", default=None,
+                        help="write the JSON artifact here "
+                             "(--quick defaults to BENCH_fuzz.json)")
+    parser.add_argument("--check", default=None, metavar="BASELINE",
+                        help="compare against a committed artifact and "
+                             "exit non-zero on frontier regression")
+    parser.add_argument("--tol-dollars", type=float, default=0.25,
+                        help="relative gpu-dollar tolerance vs the "
+                             "committed artifact (default 0.25)")
+    parser.add_argument("--tol-sla", type=float, default=0.05,
+                        help="absolute worst-tier IW SLA attainment "
+                             "drop tolerance (default 0.05)")
+    args = parser.parse_args(argv)
+
+    if args.smoke:
+        spec, mode_name = quick_spec(), "smoke"
+    elif args.quick:
+        spec, mode_name = quick_spec(), "quick"
+    else:
+        spec, mode_name = full_spec(), "full"
+
+    doc = run_fuzz(spec, mode_name)
+    _print_table(doc)
+
+    out: Optional[str] = args.out
+    if out is None and mode_name == "quick":
+        out = "BENCH_fuzz.json"
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {out}")
+
+    if args.check:
+        with open(args.check) as f:
+            baseline_doc = json.load(f)
+        failures = check_against(baseline_doc, doc, args.tol_dollars,
+                                 args.tol_sla)
+        if failures:
+            print(f"FUZZ FRONTIER REGRESSION vs {args.check}:")
+            for msg in failures:
+                print(f"  {msg}")
+            return 1
+        print(f"fuzz frontier OK vs {args.check} "
+              f"({len(doc['scenarios'])} scenarios)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

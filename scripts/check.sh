@@ -3,10 +3,19 @@
 #
 #   ./scripts/check.sh            # full tier-1 suite + smoke sweep
 #   ./scripts/check.sh --fast     # -x (stop at first failure) + smoke
+#   ./scripts/check.sh --fuzz     # only the scenario-fuzz frontier gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fuzz" ]]; then
+  echo "== scenario-fuzz frontier gate (fixed smoke subset of the quick"
+  echo "   grid vs the committed BENCH_fuzz.json) =="
+  python -m benchmarks.fuzz_report --smoke --check BENCH_fuzz.json
+  echo "== check.sh --fuzz OK =="
+  exit 0
+fi
 
 PYTEST_ARGS=(-q)
 if [[ "${1:-}" == "--fast" ]]; then
@@ -41,5 +50,10 @@ python -m benchmarks.run --week --quick --engine vector \
 
 echo "== placement smoke (tiny outage + popularity-shift scenario) =="
 python -m benchmarks.fig_placement --smoke
+
+echo "== scenario-fuzz frontier gate (3 families x 2 compositions x 2"
+echo "   stacks on the vector engine; fails on frontier regression vs"
+echo "   the committed BENCH_fuzz.json) =="
+python -m benchmarks.fuzz_report --smoke --check BENCH_fuzz.json
 
 echo "== check.sh OK =="

@@ -106,6 +106,7 @@ class Variant:
         if not self.name:
             raise ValueError("Variant.name must be non-empty")
         self.stack.validate()
+        self.workload.validate()
         return self
 
     def to_dict(self) -> Dict:
@@ -447,9 +448,11 @@ def _dump_trace(trace: Trace, path: str) -> str:
     meta = json.dumps({"models": list(trace.models),
                        "regions": list(trace.regions),
                        "tiers": list(trace.tiers)})
+    cols = {c: getattr(trace, c) for c in _TRACE_COLS}
+    if trace.session is not None:     # optional KV-affinity column
+        cols["session"] = trace.session
     with open(path, "wb") as f:
-        np.savez(f, meta=np.array(meta),
-                 **{c: getattr(trace, c) for c in _TRACE_COLS})
+        np.savez(f, meta=np.array(meta), **cols)
     return path
 
 
@@ -461,6 +464,8 @@ def _load_trace(path: str) -> Trace:
             tr = Trace(models=tuple(meta["models"]),
                        regions=tuple(meta["regions"]),
                        tiers=tuple(meta["tiers"]),
+                       session=(z["session"] if "session" in z.files
+                                else None),
                        **{c: z[c] for c in _TRACE_COLS})
         _WORKER_TRACES[path] = tr
     return tr

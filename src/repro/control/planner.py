@@ -400,8 +400,13 @@ def _make_sageserve_planner(ctx, theta=None, theta_headroom: float = 0.7,
     """GlobalPlanner factory: per-model θ (sustained input TPS per
     instance, derated by ``theta_headroom`` to protect tail latency)
     defaults from the build context's perf profiles.  The seasonal
-    period defaults to one day of ``window_sec`` buckets, capped so two
-    full periods fit inside the stack's TPS history lookback."""
+    period defaults to one day of ``window_sec`` buckets — or one full
+    week when the stack retains enough TPS history for two weekly
+    periods (lookback >= 14 days), so weekly structure in the workload
+    (weekend quiescing, repro.workloads weekly harmonics) differences
+    out of the forecast instead of aliasing into the daily period.
+    Either way the period is capped so two full periods fit inside the
+    lookback; the default 8-day lookback keeps the one-day period."""
     if theta is None:
         if ctx is None:
             raise ValueError("planner 'sageserve' needs either explicit "
@@ -413,8 +418,10 @@ def _make_sageserve_planner(ctx, theta=None, theta_headroom: float = 0.7,
         kwargs.setdefault("window_sec", getattr(ctx, "tps_window", 60.0))
         if "seasonal_period" not in kwargs:
             lookback = getattr(ctx, "history_lookback", 8 * 86400.0)
+            week = 7 * 86400.0
+            period_sec = week if lookback / 2 >= week else 86400.0
             kwargs["seasonal_period"] = int(
-                min(86400.0, lookback / 2) // kwargs["window_sec"])
+                min(period_sec, lookback / 2) // kwargs["window_sec"])
         if "place_leads" not in kwargs:
             kwargs["place_leads"] = {
                 m: (p.spot_swap_time, p.load_time_local,

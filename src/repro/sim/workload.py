@@ -107,6 +107,14 @@ class WorkloadSpec:
     prompt_lognorm: Tuple[float, float] = (7.2, 1.0)   # median ~1.3k
     output_lognorm: Tuple[float, float] = (5.2, 0.9)   # median ~180
     pop_shifts: Tuple[PopularityShift, ...] = ()       # scenario layer
+    # structured workload family (repro.workloads.WorkloadFamily): when
+    # set, generation dispatches to the family compiler — multi-turn
+    # sessions, heavy-tailed lengths, floods, flash crowds, weekly
+    # seasonality — and the family's own rate/mix/length calibration
+    # replaces this spec's iw/niw/lognorm knobs.  days / scale / seed /
+    # models / regions / start_dow / pop_shifts / burst_* still apply,
+    # so the scenario fuzzer can compose its axes on any family.
+    family: Optional[object] = None
 
     def __post_init__(self):
         # normalize sequence fields to tuples so specs compare equal
@@ -120,6 +128,47 @@ class WorkloadSpec:
         self.pop_shifts = tuple(
             s if isinstance(s, PopularityShift) else PopularityShift(**s)
             for s in self.pop_shifts)
+        if self.family is not None and not hasattr(self.family, "compile"):
+            # dict form (JSON round-trip): coerce through the library.
+            # Lazy import — the workloads package imports this module.
+            from repro.workloads.families import WorkloadFamily
+            self.family = WorkloadFamily.from_dict(self.family)
+
+    # -------------------------------------------------------------- validate
+    def validate(self) -> "WorkloadSpec":
+        """Reject degenerate traces loudly: scenario knobs pointing
+        outside the trace span used to *silently* generate a trace in
+        which the scenario never happens."""
+        if self.days <= 0:
+            raise ValueError(f"WorkloadSpec.days must be positive "
+                             f"(got {self.days})")
+        if self.scale <= 0:
+            raise ValueError(f"WorkloadSpec.scale must be positive "
+                             f"(got {self.scale})")
+        duration_h = self.days * 24.0
+        if self.burst_mult < 0:
+            raise ValueError(
+                f"WorkloadSpec.burst_mult must be >= 0 (got "
+                f"{self.burst_mult}); to silence a burst, drop its "
+                f"burst_hours instead")
+        for bh in self.burst_hours:
+            if not 0.0 <= bh < duration_h:
+                raise ValueError(
+                    f"WorkloadSpec.burst_hours entry {bh} is outside the "
+                    f"trace ([0, {duration_h}) hours for days="
+                    f"{self.days}) — the burst would never fire")
+        for s in self.pop_shifts:
+            # end_hour past the trace end is the "until the end" idiom
+            # and clips harmlessly; a start_hour outside the trace means
+            # the shift never applies at all — reject that loudly.
+            if s.start_hour < 0 or s.start_hour >= duration_h:
+                raise ValueError(
+                    f"pop_shifts[{s.model!r}]: start_hour {s.start_hour} "
+                    f"is outside the trace ([0, {duration_h}) hours for "
+                    f"days={self.days}) — the shift would never apply")
+        if self.family is not None:
+            self.family.validate()
+        return self
 
     # ------------------------------------------------------------- dict I/O
     def to_dict(self) -> Dict:
@@ -128,6 +177,8 @@ class WorkloadSpec:
             v = getattr(self, f.name)
             if f.name == "pop_shifts":
                 v = [s.to_dict() for s in v]
+            elif f.name == "family":
+                v = None if v is None else v.to_dict()
             elif isinstance(v, tuple):
                 v = list(v)
             out[f.name] = v
@@ -178,6 +229,11 @@ class Trace:
     output_tokens: np.ndarray  # int64
     ttft_deadline: np.ndarray  # float64 absolute
     deadline: np.ndarray       # float64 absolute
+    # KV-reuse affinity: requests sharing a session id are turns of one
+    # multi-turn conversation (repro.workloads session families); -1 =
+    # no session.  Optional — plain traces carry None and every
+    # consumer that doesn't know about sessions keeps working.
+    session: Optional[np.ndarray] = None    # int64, -1 = none
 
     def __len__(self) -> int:
         return int(self.arrival.shape[0])
@@ -191,7 +247,9 @@ class Trace:
             prompt_tokens=self.prompt_tokens[order],
             output_tokens=self.output_tokens[order],
             ttft_deadline=self.ttft_deadline[order],
-            deadline=self.deadline[order])
+            deadline=self.deadline[order],
+            session=(None if self.session is None
+                     else self.session[order]))
 
     # ---------------------------------------------------------------- bridge
     @classmethod
@@ -284,7 +342,14 @@ class Trace:
 def generate_trace(spec: WorkloadSpec) -> Trace:
     """Vectorized trace generation: every (region, tier) draws its whole
     run of Poisson counts, offsets, model picks and token lengths as
-    numpy arrays — no per-minute Python loop."""
+    numpy arrays — no per-minute Python loop.
+
+    A spec carrying a ``family`` (repro.workloads) dispatches to the
+    family compiler; the default path below is bit-identical to what it
+    always generated."""
+    spec.validate()
+    if spec.family is not None:
+        return spec.family.compile(spec)
     rng = np.random.default_rng(spec.seed)
     minutes = int(spec.days * 24 * 60)
     models = tuple(spec.models)
@@ -429,24 +494,56 @@ def tps_series(reqs: Union["Trace", Sequence[Request]], window: float = 60.0,
     return out
 
 
-def replay_csv(path: str) -> List[Request]:
-    """Load a real trace: columns rid,model,region,tier,arrival,
-    prompt_tokens,output_tokens[,ttft_deadline,deadline].  ``.gz`` paths
-    are opened transparently."""
-    reqs = []
+def replay_trace(path: str) -> Trace:
+    """Load a real trace straight into the columnar ``Trace``: columns
+    rid,model,region,tier,arrival,prompt_tokens,output_tokens
+    [,ttft_deadline,deadline].  ``.gz`` paths are opened transparently.
+
+    Rows accumulate into per-field Python lists and become numpy columns
+    once — no intermediate ``Request`` objects, so replay ingest matches
+    the generator's struct-of-arrays path and the vector engine can
+    consume replayed traces without ever materializing objects."""
+    cols: Dict[str, List] = {k: [] for k in (
+        "rid", "model", "region", "tier", "arrival", "prompt", "output",
+        "ttft", "deadline")}
     opener = gzip.open if str(path).endswith(".gz") else open
     with opener(path, "rt", newline="") as f:
         for row in csv.DictReader(f):
             arrival = float(row["arrival"])
             tier = row["tier"]
-            ttft_dl = float(row.get("ttft_deadline") or
-                            (arrival + TTFT_SLA.get(tier, NIW_DEADLINE)))
-            dl = float(row.get("deadline") or (arrival + NIW_DEADLINE))
-            reqs.append(Request(
-                rid=int(row["rid"]), model=row["model"],
-                region=row["region"], tier=tier, arrival=arrival,
-                prompt_tokens=int(row["prompt_tokens"]),
-                output_tokens=int(row["output_tokens"]),
-                ttft_deadline=ttft_dl, deadline=dl))
-    reqs.sort(key=lambda r: r.arrival)
-    return reqs
+            cols["rid"].append(int(row["rid"]))
+            cols["model"].append(row["model"])
+            cols["region"].append(row["region"])
+            cols["tier"].append(tier)
+            cols["arrival"].append(arrival)
+            cols["prompt"].append(int(row["prompt_tokens"]))
+            cols["output"].append(int(row["output_tokens"]))
+            cols["ttft"].append(float(
+                row.get("ttft_deadline") or
+                (arrival + TTFT_SLA.get(tier, NIW_DEADLINE))))
+            cols["deadline"].append(float(
+                row.get("deadline") or (arrival + NIW_DEADLINE)))
+    models = tuple(sorted(set(cols["model"])))
+    regions = tuple(sorted(set(cols["region"])))
+    tiers = tuple(sorted(set(cols["tier"])))
+    mi = {m: i for i, m in enumerate(models)}
+    ri = {r: i for i, r in enumerate(regions)}
+    ti = {t: i for i, t in enumerate(tiers)}
+    trace = Trace(
+        models=models, regions=regions, tiers=tiers,
+        rid=np.asarray(cols["rid"], np.int64),
+        model_idx=np.asarray([mi[m] for m in cols["model"]], np.int16),
+        region_idx=np.asarray([ri[r] for r in cols["region"]], np.int16),
+        tier_idx=np.asarray([ti[t] for t in cols["tier"]], np.int16),
+        arrival=np.asarray(cols["arrival"], np.float64),
+        prompt_tokens=np.asarray(cols["prompt"], np.int64),
+        output_tokens=np.asarray(cols["output"], np.int64),
+        ttft_deadline=np.asarray(cols["ttft"], np.float64),
+        deadline=np.asarray(cols["deadline"], np.float64))
+    return trace.sorted_by_arrival()
+
+
+def replay_csv(path: str) -> List[Request]:
+    """Compatibility wrapper over :func:`replay_trace` for event-loop
+    callers that want ``Request`` objects."""
+    return replay_trace(path).to_requests()

@@ -1,0 +1,365 @@
+"""repro.workloads: family library, session generation, scenario fuzzer.
+
+Statistical anchors use generous tolerances — they pin the *shape* of
+each family (session turn counts, think-time medians, context growth,
+flood/flash rate ratios, heavy tails, regional phase), not exact
+values, so they are robust to any seed while still catching a broken
+generator.  Determinism tests are exact: same spec ⇒ identical trace.
+"""
+import dataclasses
+import gzip
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import PolicySpec, StackSpec, build_stack
+from repro.api.experiment import _dump_trace, _load_trace
+from repro.sim.types import TIER_IWF, TIER_IWN, TIER_NIW
+from repro.sim.workload import (PAPER_MODELS, REGIONS, PopularityShift,
+                                WorkloadSpec, generate_trace, replay_csv,
+                                replay_trace)
+from repro.workloads import (FAMILIES, FlashCrowd, FloodWindow, FuzzSpec,
+                             PreemptionStorm, SessionProfile,
+                             WorkloadFamily, family_workload,
+                             fuzz_experiment, fuzz_scenarios)
+
+CHAT = dict(days=0.3, scale=0.02, seed=1)
+
+
+def _tier_mask(tr, tier):
+    return tr.tier_idx == tr.tiers.index(tier)
+
+
+# ------------------------------------------------------------------ catalog
+def test_catalog_names_and_validity():
+    assert len(FAMILIES) >= 5
+    for name, fam in FAMILIES.items():
+        assert fam.name == name
+        fam.validate()
+
+
+def test_all_families_generate_and_roundtrip():
+    for name in sorted(FAMILIES):
+        wl = family_workload(name, days=0.2, scale=0.005, seed=3)
+        tr = generate_trace(wl)
+        assert len(tr) > 100, name
+        # strictly JSON-able and bit-stable through the dict form —
+        # the contract trace memoization and spill files rely on
+        d = json.loads(json.dumps(wl.to_dict()))
+        wl2 = WorkloadSpec.from_dict(d)
+        assert wl2.to_dict() == wl.to_dict(), name
+        tr2 = generate_trace(wl2)
+        assert len(tr2) == len(tr), name
+        np.testing.assert_array_equal(tr2.arrival, tr.arrival)
+        np.testing.assert_array_equal(tr2.prompt_tokens, tr.prompt_tokens)
+
+
+def test_unknown_family_name_is_loud():
+    with pytest.raises(KeyError, match="no workload family"):
+        family_workload("definitely-not-a-family")
+
+
+def test_family_from_dict_rejects_unknown_keys():
+    d = FAMILIES["steady-diurnal"].to_dict()
+    d["typo_knob"] = 1
+    with pytest.raises(KeyError, match="typo_knob"):
+        WorkloadFamily.from_dict(d)
+
+
+# ----------------------------------------------------------------- sessions
+def _session_turns(tr):
+    """(sorted session column, turn number within each session) over the
+    session-tagged rows, in (session, arrival) order."""
+    m = tr.session >= 0
+    order = np.lexsort((tr.arrival[m], tr.session[m]))
+    s = tr.session[m][order]
+    arr = tr.arrival[m][order]
+    prompts = tr.prompt_tokens[m][order]
+    first = np.r_[True, s[1:] != s[:-1]]
+    idx = np.arange(len(s))
+    seg_start = np.maximum.accumulate(np.where(first, idx, 0))
+    return s, arr, prompts, idx - seg_start
+
+
+def test_session_statistical_anchors():
+    tr = generate_trace(family_workload("chat-sessions", **CHAT))
+    assert tr.session is not None
+    # NIW stays session-free; IW rows carry the affinity tag
+    assert (tr.session[_tier_mask(tr, TIER_NIW)] == -1).all()
+    assert (tr.session[_tier_mask(tr, TIER_IWF)] >= 0).all()
+
+    s, arr, prompts, turn_no = _session_turns(tr)
+    n_sessions = len(np.unique(s))
+    mean_turns = len(s) / n_sessions
+    # lognormal(1.25, 0.6) clipped to [1, 32]: mean ~4.2
+    assert 2.0 < mean_turns < 8.0
+
+    # think-time gaps between consecutive turns: lognormal(3.4, 0.8),
+    # median ~30 s
+    same = s[1:] == s[:-1]
+    gaps = (arr[1:] - arr[:-1])[same]
+    assert (gaps > 0).all()
+    assert 10.0 < np.median(gaps) < 90.0
+
+    # context growth: later turns resend ~90% of history, so prompts
+    # grow monotonically in expectation with the turn number
+    p0 = prompts[turn_no == 0].mean()
+    p2 = prompts[turn_no == 2].mean()
+    p5 = prompts[turn_no == 5].mean()
+    assert p2 > 1.5 * p0
+    assert p5 > p2
+
+
+def test_session_determinism_across_seeds():
+    a = generate_trace(family_workload("chat-sessions", **CHAT))
+    b = generate_trace(family_workload("chat-sessions", **CHAT))
+    np.testing.assert_array_equal(a.arrival, b.arrival)
+    np.testing.assert_array_equal(a.session, b.session)
+    np.testing.assert_array_equal(a.prompt_tokens, b.prompt_tokens)
+    c = generate_trace(family_workload(
+        "chat-sessions", days=0.3, scale=0.02, seed=2))
+    assert len(c) != len(a) or not np.array_equal(c.arrival, a.arrival)
+
+
+def test_sorted_by_arrival_keeps_session_alignment():
+    tr = generate_trace(family_workload("chat-sessions", **CHAT))
+    assert (np.diff(tr.arrival) >= 0).all()
+    rid_to_sess = dict(zip(tr.rid.tolist(), tr.session.tolist()))
+    # scramble and re-sort: the (rid -> session) pairing must survive
+    perm = np.random.default_rng(0).permutation(len(tr))
+    scrambled = dataclasses.replace(
+        tr, rid=tr.rid[perm], model_idx=tr.model_idx[perm],
+        region_idx=tr.region_idx[perm], tier_idx=tr.tier_idx[perm],
+        arrival=tr.arrival[perm], prompt_tokens=tr.prompt_tokens[perm],
+        output_tokens=tr.output_tokens[perm],
+        ttft_deadline=tr.ttft_deadline[perm],
+        deadline=tr.deadline[perm], session=tr.session[perm])
+    back = scrambled.sorted_by_arrival()
+    assert (np.diff(back.arrival) >= 0).all()
+    assert all(rid_to_sess[r] == s for r, s in
+               zip(back.rid.tolist(), back.session.tolist()))
+
+
+def test_session_trace_spill_roundtrip(tmp_path):
+    tr = generate_trace(family_workload(
+        "chat-sessions", days=0.05, scale=0.01, seed=2))
+    path = str(tmp_path / "t.npz")
+    _load_trace.__globals__["_WORKER_TRACES"].clear()
+    _dump_trace(tr, path)
+    back = _load_trace(path)
+    np.testing.assert_array_equal(back.session, tr.session)
+    np.testing.assert_array_equal(back.arrival, tr.arrival)
+    # plain traces spill without the column and load back as None
+    plain = generate_trace(WorkloadSpec(days=0.02, scale=0.01))
+    path2 = str(tmp_path / "p.npz")
+    _dump_trace(plain, path2)
+    assert _load_trace(path2).session is None
+
+
+# ----------------------------------------------------------------- validate
+def test_workload_spec_validate_rejections():
+    with pytest.raises(ValueError, match="days"):
+        WorkloadSpec(days=0.0).validate()
+    with pytest.raises(ValueError, match="burst_mult"):
+        WorkloadSpec(burst_mult=-2.0, burst_hours=(3.0,)).validate()
+    with pytest.raises(ValueError, match="burst_hours"):
+        WorkloadSpec(days=1.0, burst_mult=8.0,
+                     burst_hours=(30.0,)).validate()
+    with pytest.raises(ValueError, match="never apply"):
+        WorkloadSpec(days=1.0, pop_shifts=(
+            PopularityShift(PAPER_MODELS[0], 30.0, 31.0, 2.0),
+        )).validate()
+    # end_hour past the trace end is the "until the end" idiom: allowed
+    WorkloadSpec(days=0.2, pop_shifts=(
+        PopularityShift(PAPER_MODELS[0], 2.0, 24.0, 0.0),)).validate()
+    # generate_trace validates (the old path silently generated a
+    # degenerate trace in which the scenario never fired)
+    with pytest.raises(ValueError, match="burst_hours"):
+        generate_trace(WorkloadSpec(days=0.1, scale=0.01,
+                                    burst_mult=8.0, burst_hours=(12.0,)))
+
+
+def test_family_component_validate_rejections():
+    with pytest.raises(ValueError, match="peak_mult"):
+        FlashCrowd(hour=1.0, peak_mult=0.5).validate()
+    with pytest.raises(ValueError, match="mult"):
+        FloodWindow(start_hour=1.0, duration_h=1.0, mult=-1.0).validate()
+    with pytest.raises(ValueError, match="context_carry"):
+        SessionProfile(context_carry=1.5).validate()
+    with pytest.raises(ValueError, match="alpha"):
+        dataclasses.replace(FAMILIES["longctx-summarize"],
+                            prompt_tail=(0.2, 0.9, 100.0)).validate()
+    with pytest.raises(ValueError, match="events"):
+        PreemptionStorm(events=0).validate()
+    # a bad family embedded in a spec fails at generate time
+    bad = dataclasses.replace(FAMILIES["steady-diurnal"],
+                              diurnal_amp=3.0)
+    with pytest.raises(ValueError, match="diurnal_amp"):
+        generate_trace(WorkloadSpec(days=0.05, scale=0.01, family=bad))
+
+
+# ----------------------------------------------------- family shape anchors
+def test_flood_window_elevates_niw_rate():
+    tr = generate_trace(family_workload(
+        "niw-report-flood", days=1.0, scale=0.01, seed=5))
+    arr = tr.arrival[_tier_mask(tr, TIER_NIW)]
+    h = arr / 3600.0
+    # 8x flood in [00:30, 02:30) vs a quiet window of equal width
+    flood = ((h >= 0.5) & (h < 2.5)).sum()
+    quiet = ((h >= 5.0) & (h < 7.0)).sum()
+    assert flood > 3 * quiet
+
+
+def test_flash_crowd_spikes_iw_rate():
+    tr = generate_trace(family_workload(
+        "flash-crowd", days=1.0, scale=0.01, seed=5))
+    iw = _tier_mask(tr, TIER_IWF) | _tier_mask(tr, TIER_IWN)
+    h = tr.arrival[iw] / 3600.0
+    crowd = ((h >= 10.0) & (h < 10.5)).sum()
+    before = ((h >= 9.0) & (h < 9.5)).sum()
+    assert crowd > 2 * before
+
+
+def test_longctx_family_has_heavy_tail():
+    base = generate_trace(family_workload(
+        "steady-diurnal", days=0.2, scale=0.01, seed=7))
+    lc = generate_trace(family_workload(
+        "longctx-summarize", days=0.2, scale=0.01, seed=7))
+    assert np.percentile(lc.prompt_tokens, 99) > \
+        1.5 * np.percentile(base.prompt_tokens, 99)
+    assert (lc.prompt_tokens >= 4096).mean() > 0.10
+
+
+def test_region_shift_moves_the_peak():
+    tr = generate_trace(family_workload(
+        "region-shifted", days=1.0, scale=0.01, seed=5))
+    iw = _tier_mask(tr, TIER_IWF) | _tier_mask(tr, TIER_IWN)
+
+    def peak_hour(region):
+        m = iw & (tr.region_idx == tr.regions.index(region))
+        hist, _ = np.histogram(tr.arrival[m] / 3600.0,
+                               bins=24, range=(0, 24))
+        return int(np.argmax(hist))
+
+    # centralus is phase-shifted +8h vs eastus (follow-the-sun)
+    gap = abs(peak_hour("eastus") - peak_hour("centralus"))
+    assert min(gap, 24 - gap) >= 4
+
+
+def test_preemption_storm_windows():
+    storm = FAMILIES["preemption-storm"].preemption
+    wins = storm.to_windows(1.0, REGIONS, seed=11)
+    assert wins == storm.to_windows(1.0, REGIONS, seed=11)
+    assert len(wins) >= 1
+    per_region = {}
+    for rg, s, e in wins:
+        assert rg in REGIONS and 0.0 <= s < e <= 86400.0
+        per_region.setdefault(rg, []).append((s, e))
+    for spans in per_region.values():
+        spans.sort()
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert s1 > e0      # merged: no same-region overlap
+    assert wins != storm.to_windows(1.0, REGIONS, seed=12)
+
+
+# -------------------------------------------------------------------- fuzzer
+def test_fuzz_scenarios_deterministic_and_two_axes():
+    fs = FuzzSpec(seed=4, days=0.5, scale=0.01, n_composed=5)
+    a = fuzz_scenarios(fs)
+    b = fuzz_scenarios(fs)
+    assert [s.to_dict() for s in a] == [s.to_dict() for s in b]
+    stress = {"outage", "popshift", "burst", "preempt"}
+    composed = [s for s in a if not s.name.startswith("pure/")]
+    assert len(composed) == 5
+    for sc in composed:
+        assert len(stress & set(sc.axes)) >= 2, sc.name
+    # a different seed reshuffles the grid
+    c = fuzz_scenarios(FuzzSpec(seed=5, days=0.5, scale=0.01,
+                                n_composed=5))
+    assert [s.to_dict() for s in c] != [s.to_dict() for s in a]
+
+
+def test_fuzz_spec_validate_rejections():
+    with pytest.raises(KeyError, match="family"):
+        FuzzSpec(families=("nope",)).validate()
+    with pytest.raises(KeyError, match="stack"):
+        FuzzSpec(stacks=("nope",)).validate()
+    with pytest.raises(ValueError, match="p_outage"):
+        FuzzSpec(p_outage=1.5).validate()
+    d = FuzzSpec().to_dict()
+    assert FuzzSpec.from_dict(json.loads(json.dumps(d))).to_dict() == d
+
+
+def test_fuzz_experiment_expands_and_validates():
+    fs = FuzzSpec(seed=0, days=0.2, scale=0.005, n_composed=2,
+                  families=("steady-diurnal", "chat-sessions"))
+    scs = fuzz_scenarios(fs)
+    exp = fuzz_experiment(fs, scs)
+    exp.validate()
+    variants = exp.expand()
+    assert len(variants) == len(scs) * len(fs.stacks)
+    assert exp.engine == "vector"
+    # every stack of one scenario runs the identical workload (memoized
+    # trace ⇒ identical requests), with the scenario's outage windows
+    by_scenario = {}
+    for v in variants:
+        by_scenario.setdefault(v.workload_name, []).append(v)
+    for sc in scs:
+        group = by_scenario[sc.name]
+        assert len(group) == len(fs.stacks)
+        wls = {json.dumps(v.workload.to_dict(), sort_keys=True)
+               for v in group}
+        assert len(wls) == 1
+        for v in group:
+            want = None if sc.scenario is None else sc.scenario.to_dict()
+            got = None if v.stack.scenario is None \
+                else v.stack.scenario.to_dict()
+            assert got == want
+
+
+# ------------------------------------------------------------------- replay
+def test_replay_trace_is_columnar_and_matches_wrapper(tmp_path):
+    rows = ["rid,model,region,tier,arrival,prompt_tokens,output_tokens",
+            "0,m1,r1,IW-F,5.0,100,10",
+            "1,m2,r1,NIW,1.0,200,20",
+            "2,m1,r2,IW-N,3.0,300,30"]
+    p = tmp_path / "t.csv"
+    p.write_text("\n".join(rows) + "\n")
+    tr = replay_trace(str(p))
+    assert (np.diff(tr.arrival) >= 0).all()
+    assert tr.session is None
+    assert list(tr.rid) == [1, 2, 0]      # sorted by arrival
+    reqs = replay_csv(str(p))
+    assert [r.rid for r in reqs] == [1, 2, 0]
+    assert [(r.model, r.region, r.tier, r.arrival, r.prompt_tokens)
+            for r in reqs] == \
+        [("m2", "r1", "NIW", 1.0, 200), ("m1", "r2", "IW-N", 3.0, 300),
+         ("m1", "r1", "IW-F", 5.0, 100)]
+    # gzip transparency on the columnar path too
+    pz = tmp_path / "t.csv.gz"
+    with gzip.open(pz, "wt") as f:
+        f.write("\n".join(rows) + "\n")
+    trz = replay_trace(str(pz))
+    np.testing.assert_array_equal(trz.arrival, tr.arrival)
+    np.testing.assert_array_equal(trz.prompt_tokens, tr.prompt_tokens)
+
+
+# ----------------------------------------------------- forecast seasonality
+def test_weekly_seasonal_period_when_lookback_allows():
+    # default 8-day lookback: unchanged — one day of 60 s buckets
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                     scaler="lt-ua", planner="sageserve")
+    assert build_stack(spec).planner.cfg.seasonal_period == 1440
+    # two weeks of history: the planner keys on the weekly structure
+    # (weekend quiescing, repro.workloads weekly harmonics)
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS,
+                     scaler="lt-ua", planner="sageserve",
+                     history_lookback=14 * 86400.0)
+    assert build_stack(spec).planner.cfg.seasonal_period == 10080
+    # explicit override still wins
+    spec = StackSpec(models=PAPER_MODELS, regions=REGIONS, scaler="lt-ua",
+                     planner=PolicySpec("sageserve",
+                                        {"seasonal_period": 7}),
+                     history_lookback=14 * 86400.0)
+    assert build_stack(spec).planner.cfg.seasonal_period == 7
